@@ -1,0 +1,49 @@
+"""Figure 6 analogue: RLHF generation / training / effective throughput
+(TFLOPs per chip) vs model size at the chip count that maximizes
+efficiency — derived from the same bandwidth/compute roofline the paper
+reasons with (generation is bandwidth-bound => low FLOPs; training is
+compute-bound => high FLOPs; effective = FLOP-weighted harmonic blend)."""
+from __future__ import annotations
+
+from benchmarks import hw
+
+SIZES = ["opt-1.3b", "opt-6.7b", "opt-13b", "opt-30b", "opt-66b",
+         "opt-175b"]
+CHIP_CHOICES = [8, 16, 32, 64, 128, 256]
+
+
+def effective_tflops(name: str, chips: int):
+    n = hw.opt_params(name)
+    if not hw.fits_per_chip_training(n, chips):
+        return None
+    r = hw.RECIPE
+    gen_flops = 2 * n * r["global_batch"] * r["gen"]
+    gen_t = r["gen"] * hw.gen_time_per_token_s(n, chips)
+    train_tokens = r["global_batch"] * (r["prompt"] + r["gen"])
+    train_flops = 6 * n * train_tokens * (4.0 / 3.0)
+    train_t = hw.train_time_per_step_s(n, train_tokens, chips)
+    eff = (gen_flops + train_flops) / (gen_t + train_t) / chips
+    return (gen_flops / gen_t / chips, train_flops / train_t / chips, eff)
+
+
+def run():
+    rows = []
+    for name in SIZES:
+        best = None
+        for chips in CHIP_CHOICES:
+            out = effective_tflops(name, chips)
+            if out is None:
+                continue
+            if best is None or out[2] > best[1][2]:
+                best = (chips, out)
+        if best is None:
+            rows.append((f"fig6_{name}", -1.0, "OOM"))
+            continue
+        chips, (g, t, e) = best
+        rows.append((f"fig6_{name}_gen", g / 1e12,
+                     f"TFLOPs/chip@{chips}chips"))
+        rows.append((f"fig6_{name}_train", t / 1e12,
+                     f"{t/hw.PEAK_FLOPS:.1%}_of_peak"))
+        rows.append((f"fig6_{name}_effective", e / 1e12,
+                     f"{e/hw.PEAK_FLOPS:.1%}_of_peak"))
+    return rows

@@ -1,0 +1,66 @@
+"""Shared hardware model for the paper-table analogues.
+
+Target: TPU v5e (197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI,
+16 GiB HBM/chip).  The paper's A100 tables are re-derived as first-order
+roofline projections on this target; measured CPU numbers come from the
+reduced models.
+"""
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_BYTES = 16 * 2 ** 30
+
+# paper's stage-3 recipe (BenchmarkSetting.md): 131.9k prompt/answer pairs,
+# 256 prompt + 256 generated tokens, global batch 1024 pairs
+RECIPE = dict(pairs=131_900, prompt=256, gen=256, global_batch=1024)
+
+TRAIN_MFU = 0.45          # attainable MFU for the compute-bound RL phase
+GEN_BW_EFF = 0.75         # attainable fraction of HBM bw during decode
+
+
+def opt_params(name: str) -> float:
+    from repro.configs.opt_family import OPT_CONFIGS
+    return float(OPT_CONFIGS[name].n_params())
+
+
+def gen_time_per_token_s(n_params: float, chips: int, *,
+                         mode: str = "hybrid", dp: int = 1) -> float:
+    """Decode is bandwidth-bound: every weight byte is read once per token.
+
+    hybrid     — TP layout: weights sharded over all chips, no per-token
+                 comms (HE gathers once per phase, amortized to ~0).
+    zero3_naive— generation under the training layout: every token
+                 re-all-gathers the dp-sharded weights over ICI.
+    ddp        — weights fully replicated per chip: per-token read is the
+                 FULL model from one chip's HBM (no sharding speedup).
+    """
+    bytes_model = 2.0 * n_params                   # bf16 weights
+    if mode == "hybrid":
+        return bytes_model / chips / (HBM_BW * GEN_BW_EFF)
+    if mode == "zero3_naive":
+        hbm = bytes_model / chips / (HBM_BW * GEN_BW_EFF)
+        ici = bytes_model * (dp - 1) / dp / chips / ICI_BW * dp
+        return hbm + ici
+    if mode == "ddp":
+        return bytes_model / (HBM_BW * GEN_BW_EFF)
+    raise ValueError(mode)
+
+
+def train_time_per_step_s(n_params: float, tokens: int, chips: int,
+                          n_model_passes: float = 4.0/3.0) -> float:
+    """Compute-bound fwd+bwd; PPO touches actor fwd+bwd (3 passes) plus
+    ref/critic/reward forwards — ``n_model_passes`` scales 6ND
+    accordingly (4/3 ~= (3+1)/3 for a reward model of similar size)."""
+    flops = 6.0 * n_params * tokens * n_model_passes
+    return flops / (chips * PEAK_FLOPS * TRAIN_MFU)
+
+
+def fits_per_chip_training(n_params: float, chips: int, *,
+                           strategy: str = "zero3") -> bool:
+    """16 bytes/param of model states (fp32 master+m+v, bf16 param+grad),
+    sharded by ZeRO; DDP replicates everything."""
+    states = 16.0 * n_params
+    per_chip = states / chips if strategy.startswith("zero") else states
+    return per_chip < 0.8 * HBM_BYTES

@@ -1,0 +1,34 @@
+"""Table 3 analogue: max trainable model on a SINGLE chip, by device HBM
+size, under each memory strategy (full fp32 states / bf16+ZeRO-style
+sharing impossible on 1 chip / LoRA adapters-only).  The paper's single-
+GPU 13B relies on trimming optimizer state exactly like the LoRA row."""
+from __future__ import annotations
+
+from benchmarks import hw
+from repro.configs.opt_family import OPT_CONFIGS
+
+DEVICES = [("v5e_16G", 16), ("a6000_48G", 48), ("a100_40G", 40),
+           ("a100_80G", 80)]
+
+# bytes per parameter of resident state
+MODES = [
+    ("full_adamw", 16.0),        # fp32 master+m+v + bf16 param/grad
+    ("bf16_adamw8bit", 7.0),     # bf16 param/grad + 8-bit moments + frags
+    ("lora", 2.6),               # frozen bf16 base + adapter states
+]
+
+
+def run():
+    sizes = sorted(((n, OPT_CONFIGS[n].n_params()) for n in OPT_CONFIGS),
+                   key=lambda kv: kv[1])
+    rows = []
+    for dev, gib in DEVICES:
+        budget = 0.85 * gib * 2 ** 30
+        for mode, bpp in MODES:
+            best = "none"
+            for name, n in sizes:
+                if n * bpp <= budget:
+                    best = name
+            rows.append((f"t3_max_model_{dev}_{mode}",
+                         budget / bpp, best))
+    return rows

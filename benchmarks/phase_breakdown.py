@@ -1,0 +1,56 @@
+"""Figure 5 analogue: time/sequence breakdown of one RLHF stage-3
+iteration (generation vs training) — MEASURED on a reduced actor+reward
+pair on CPU.  The paper's point: generation dominates e2e time despite
+being ~20% of FLOPs."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ppo import PPOConfig, PPOTrainer
+from repro.models.config import ModelConfig
+from repro.models import reward as R
+from repro.models import transformer as T
+
+V = 128
+ACTOR = ModelConfig(name="bench-actor", arch_type="dense", n_layers=4,
+                    d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+                    vocab_size=V, compute_dtype="float32", remat=False)
+CRITIC = ACTOR.replace(name="bench-critic", n_layers=2)
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    trainer = PPOTrainer(
+        actor_cfg=ACTOR, critic_cfg=CRITIC,
+        actor_params=T.init_params(ACTOR, key),
+        critic_params=R.init_params(CRITIC, key),
+        ref_params=T.init_params(ACTOR, key),
+        reward_params=R.init_params(CRITIC, key),
+        ppo=PPOConfig(max_new_tokens=32, use_ema=True))
+    prompts = jax.random.randint(key, (8, 32), 0, V)
+
+    # warmup (compile)
+    exp, _ = trainer.generate_experience(prompts, key)
+    trainer.train_rlhf(exp)
+
+    n = 3
+    t0 = time.perf_counter()
+    for i in range(n):
+        exp, _ = trainer.generate_experience(prompts,
+                                             jax.random.PRNGKey(i))
+    gen_s = (time.perf_counter() - t0) / n
+    t0 = time.perf_counter()
+    for _ in range(n):
+        trainer.train_rlhf(exp)
+    train_s = (time.perf_counter() - t0) / n
+    e2e = gen_s + train_s
+    rows = [
+        ("fig5_generation_phase", gen_s * 1e6, f"{gen_s/e2e:.2%}_of_e2e"),
+        ("fig5_training_phase", train_s * 1e6, f"{train_s/e2e:.2%}_of_e2e"),
+        ("fig5_e2e_iteration", e2e * 1e6,
+         f"gen/train={gen_s/train_s:.2f}x"),
+    ]
+    return rows

@@ -1,0 +1,110 @@
+"""Roofline table builder: reads experiments/dryrun/*.json (written by
+repro.launch.dryrun) and emits (a) CSV rows for benchmarks.run, (b) the
+markdown tables for EXPERIMENTS.md §Dry-run / §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def load(mesh: str = "16x16", tag: str = ""):
+    recs = []
+    suffix = f"__{tag}.json" if tag else ".json"
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(path)
+        if base.startswith("rlhf_stage3"):
+            continue
+        if not base.endswith(suffix):
+            continue
+        if tag == "" and base.count("__") != 2:
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def run():
+    rows = []
+    for mesh in ("16x16", "2x16x16"):
+        for r in load(mesh):
+            dom = r["dominant"].replace("_s", "")
+            bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            rows.append((
+                f"roofline_{r['arch']}_{r['shape']}_{mesh}",
+                bound_s * 1e6,
+                f"{dom}-bound_useful={r['useful_flop_ratio']:.2f}",
+            ))
+    return rows
+
+
+def markdown_table(mesh: str = "16x16", tag: str = "") -> str:
+    recs = load(mesh, tag)
+    lines = [
+        f"### Roofline — mesh {mesh}" + (f" ({tag})" if tag else ""),
+        "",
+        "| arch | shape | compute s | memory s | collective s | dominant |"
+        " mem/chip GiB | useful FLOP ratio | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    hints = {
+        ("memory_s", "train"): "less activation traffic: bigger fused "
+        "blocks / fewer remat reloads",
+        ("memory_s", "prefill"): "larger attention tiles (fewer K/V "
+        "re-reads)",
+        ("memory_s", "decode"): "KV-cache quantization or GQA-wider "
+        "sharing (bytes/token floor)",
+        ("collective_s", "train"): "overlap grad reduce-scatter with "
+        "bwd; shard weights on fewer axes",
+        ("collective_s", "prefill"): "re-shard activations once per "
+        "layer block instead of per-op",
+        ("collective_s", "decode"): "replicate small weights; avoid "
+        "len-axis softmax all-reduce",
+        ("compute_s", "train"): "already compute-bound: raise MFU via "
+        "larger matmul tiles",
+        ("compute_s", "prefill"): "already compute-bound (dense MoE "
+        "dispatch): cut redundant expert FLOPs",
+    }
+    for r in recs:
+        phase = ("train" if r["shape"].startswith("train") else
+                 "prefill" if "prefill" in r["shape"] else "decode")
+        hint = hints.get((r["dominant"], phase), "-")
+        mem = r["memory"]["peak_est_bytes"] / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+            f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| **{r['dominant'].replace('_s','')}** | {mem:.2f} "
+            f"| {r['useful_flop_ratio']:.3f} | {hint} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(mesh: str = "16x16") -> str:
+    recs = load(mesh)
+    lines = [
+        f"### Dry-run — mesh {mesh}",
+        "",
+        "| arch | shape | lower s | compile s | FLOPs/dev | bytes/dev |"
+        " coll bytes/dev | mem/chip GiB | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        mem = r["memory"]["peak_est_bytes"] / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['lower_s']:.1f} "
+            f"| {r['compile_s']:.1f} | {r['flops_per_device']:.3e} "
+            f"| {r['bytes_per_device']:.3e} "
+            f"| {r['collective_bytes_per_device']['total']:.3e} "
+            f"| {mem:.2f} | {'yes' if mem <= 16 else 'NO*'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(dryrun_table("16x16"))
+    print()
+    print(markdown_table("16x16"))
+    print()
+    print(markdown_table("2x16x16"))

@@ -1,0 +1,48 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per DeepSpeed-Chat table/figure:
+
+  Tables 1/2/4/5/6 -> e2e_time            (projected v5e + measured CPU)
+  Table 3          -> max_model_size      (memory model)
+  Figures 3/4      -> hybrid_vs_baselines (HE vs naive-ZeRO vs DDP)
+  Figure 5         -> phase_breakdown     (measured gen vs train)
+  Figure 6         -> effective_throughput(TFLOPs/chip blend)
+  Figure 7         -> scalability         (super->sub-linear scaling)
+  (ours)           -> roofline            (from dry-run artifacts)
+  (ours)           -> microbench          (measured CPU hot paths)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (e2e_time, effective_throughput,
+                            hybrid_vs_baselines, max_model_size, microbench,
+                            phase_breakdown, roofline, scalability)
+    modules = [
+        ("e2e_time", e2e_time),
+        ("max_model_size", max_model_size),
+        ("hybrid_vs_baselines", hybrid_vs_baselines),
+        ("phase_breakdown", phase_breakdown),
+        ("effective_throughput", effective_throughput),
+        ("scalability", scalability),
+        ("roofline", roofline),
+        ("microbench", microbench),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules:
+        try:
+            for row in mod.run():
+                n, us, derived = row
+                print(f"{n},{us:.3f},{derived}")
+        except Exception:  # noqa: BLE001 — print all benches, fail at end
+            failed.append(name)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark modules failed: {failed}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,45 @@
+"""Figure 7 analogue: stage-3 throughput scaling with chip count for
+OPT-13B and OPT-66B.  Reproduces the paper's super-linear-then-sublinear
+shape from the same mechanism: ZeRO sharding frees per-chip memory =>
+larger per-chip batch until the 1024-pair global batch cap binds."""
+from __future__ import annotations
+
+from benchmarks import hw
+
+
+def throughput(name: str, chips: int):
+    n = hw.opt_params(name)
+    states_per_chip = 16.0 * n / chips
+    act_budget = 0.85 * hw.HBM_BYTES - states_per_chip
+    if act_budget <= 0:
+        return None
+    # activation bytes per sequence (512 tokens, remat'd carry per layer)
+    from repro.configs.opt_family import OPT_CONFIGS
+    cfg = OPT_CONFIGS[name]
+    act_per_seq = 512 * cfg.d_model * 2 * cfg.n_layers * 2.5
+    max_local = max(int(act_budget // act_per_seq), 0)
+    if max_local == 0:
+        return None
+    global_batch = min(max_local * chips, hw.RECIPE["global_batch"])
+    r = hw.RECIPE
+    gen_t = r["gen"] * hw.gen_time_per_token_s(n, chips)
+    tokens = global_batch * (r["prompt"] + r["gen"])
+    train_t = hw.train_time_per_step_s(n, tokens, chips)
+    return global_batch / (gen_t + train_t)          # sequences/s
+
+
+def run():
+    rows = []
+    for name in ["opt-13b", "opt-66b"]:
+        base = None
+        for chips in [8, 16, 32, 64, 128, 256]:
+            thr = throughput(name, chips)
+            if thr is None:
+                rows.append((f"fig7_{name}_{chips}chips", -1.0, "OOM"))
+                continue
+            if base is None:
+                base = (chips, thr)
+            scale = (thr / base[1]) / (chips / base[0])
+            rows.append((f"fig7_{name}_{chips}chips", 1e6 / thr,
+                         f"{scale:.2f}x_linear_efficiency"))
+    return rows

@@ -1,0 +1,58 @@
+"""Hybrid Engine walkthrough — the paper's Figure 2 as running code.
+
+    PYTHONPATH=src python examples/hybrid_engine_demo.py
+
+Shows the train<->inference layout switch on a local mesh, verifies the
+roundtrip is exact, and prints the cluster-scale analytics: bytes moved
+by ONE phase transition vs per-token re-gathering under naive ZeRO-3
+generation (the mechanism behind the paper's 9-15x generation speedup).
+"""
+import jax
+import numpy as np
+
+from repro.core.hybrid_engine import HybridEngine
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+
+CFG = ModelConfig(name="he-demo", arch_type="dense", n_layers=4,
+                  d_model=256, n_heads=8, n_kv_heads=4, d_ff=512,
+                  vocab_size=1024, compute_dtype="float32", remat=False)
+
+
+def main():
+    mesh = make_local_mesh()
+    he = HybridEngine(CFG, mesh)
+    params = T.init_params(CFG, jax.random.PRNGKey(0))
+
+    print("== layout switch (jitted identity with out_shardings) ==")
+    pi = he.to_inference(params)      # one all-gather pass per param
+    pt = he.to_train(pi)              # back to ZeRO-3 shards
+    same = all(bool((np.asarray(a) == np.asarray(b)).all())
+               for a, b in zip(jax.tree.leaves(params),
+                               jax.tree.leaves(pt)))
+    print(f"   roundtrip exact: {same}")
+
+    print("== cluster-scale analytics (production 16x16 mesh shapes) ==")
+
+    class MeshShape:  # shape-only stand-in; no devices needed
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    import repro.sharding.strategy as S
+    dp = S.data_axes(MeshShape)
+    n_dp = int(np.prod([MeshShape.shape[a] for a in dp]))
+    pbytes = sum(x.size * x.dtype.itemsize
+                 for x in jax.tree.leaves(params))
+    once = pbytes * (n_dp - 1)
+    for gen_tokens in (64, 256, 1024):
+        naive = once * gen_tokens
+        print(f"   {gen_tokens:5d} generated tokens: "
+              f"HE reshards {once/2**20:8.1f} MiB once; naive ZeRO-3 "
+              f"gathers {naive/2**30:8.1f} GiB ({gen_tokens}x more)")
+    print("   -> the Hybrid Engine amortizes the gather over the whole "
+          "generation phase.")
+
+
+if __name__ == "__main__":
+    main()

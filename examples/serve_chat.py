@@ -1,0 +1,81 @@
+"""Batched serving demo — the paper's inference API with conversation-
+style prompt assembly and batched request processing.
+
+    PYTHONPATH=src python examples/serve_chat.py [--batch 8] [--max-new 24]
+
+Builds a batch of byte-tokenized "Human: ... Assistant:" prompts, runs
+prefill + scanned decode with temperature/top-k sampling, and reports
+tokens/s (the generation hot loop the Hybrid Engine optimizes).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import ByteTokenizer
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.serving.generate import generate
+
+CFG = ModelConfig(name="chat-demo", arch_type="dense", n_layers=4,
+                  d_model=256, n_heads=8, n_kv_heads=4, d_ff=512,
+                  vocab_size=259, compute_dtype="float32", remat=False)
+
+QUESTIONS = [
+    "Do you know Microsoft?",
+    "Can you explain it to a 6-year-old?",
+    "What is RLHF training?",
+    "Write a haiku about TPUs.",
+    "Why is generation memory bound?",
+    "Which step dominates RLHF time?",
+    "What does the hybrid engine do?",
+    "How large can the actor be?",
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--top-k", type=int, default=40)
+    args = ap.parse_args()
+
+    tok = ByteTokenizer()
+    params = T.init_params(CFG, jax.random.PRNGKey(0))
+    prompts = np.stack([
+        tok.encode(f"Human: {QUESTIONS[i % len(QUESTIONS)]}\nAssistant:",
+                   max_len=args.prompt_len)
+        for i in range(args.batch)])
+    prompts = jnp.asarray(np.minimum(prompts, CFG.vocab_size - 1))
+
+    gen = jax.jit(lambda p, pr, k: generate(
+        CFG, p, pr, k, max_new_tokens=args.max_new,
+        temperature=args.temperature, top_k=args.top_k,
+        eos_id=tok.eos_id))
+    t0 = time.perf_counter()
+    out = gen(params, prompts, jax.random.PRNGKey(1))
+    jax.block_until_ready(out["sequences"])
+    print(f"compile+first batch: {time.perf_counter()-t0:.1f}s")
+
+    t0 = time.perf_counter()
+    n_batches = 3
+    for i in range(n_batches):
+        out = gen(params, prompts, jax.random.PRNGKey(2 + i))
+    jax.block_until_ready(out["sequences"])
+    dt = (time.perf_counter() - t0) / n_batches
+    n_tok = args.batch * args.max_new
+    print(f"batched serving: {n_tok} tokens/batch, {dt*1000:.0f} ms/batch, "
+          f"{n_tok/dt:.0f} tok/s")
+    for i in range(min(2, args.batch)):
+        resp = np.asarray(out["sequences"][i, args.prompt_len:])
+        print(f"[{i}] Human: {QUESTIONS[i]}")
+        print(f"    Assistant (untrained, random bytes): "
+              f"{tok.decode(resp)!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Assemble EXPERIMENTS.md from the dry-run artifacts + perf-iteration
+JSONs.  Run after the sweeps:  PYTHONPATH=src python experiments/build_experiments_md.py
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks import roofline as RL  # noqa: E402
+
+HEADER = """# EXPERIMENTS
+
+Reproduction of DeepSpeed-Chat (Yao et al., 2023) on the TPU-v5e
+production mesh: single pod = 16x16 = 256 chips (`("data","model")`),
+multi-pod = 2x16x16 = 512 chips (`("pod","data","model")`).
+Hardware constants: 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI,
+16 GiB HBM per chip.
+
+## Validation against the paper's own claims
+
+The paper's evaluation axes are speed / cost / scale.  Correspondences
+(details in `benchmarks/`, run `PYTHONPATH=src python -m benchmarks.run`):
+
+| paper claim | our measurement / projection |
+|---|---|
+| Fig. 5: generation dominates stage-3 e2e despite ~20% of FLOPs | measured on CPU (reduced models): generation phase is the majority of iteration wall time (`phase_breakdown`) |
+| Fig. 3/4: HE 9-15x generation speedup over naive ZeRO-3 / DDP | projection on v5e: per-token naive ZeRO-3 re-gathers all weight shards — HE amortizes ONE gather per phase => gather traffic ratio == generated tokens (256x on the paper recipe); bandwidth model in `hybrid_vs_baselines` |
+| Tables 1/2: OPT-13B stage-3 in ~9h (8xA100) / 1.25h (64xA100) | v5e roofline projection: 13B OOMs on 8x16GiB chips (A100s had 40-80GB) but runs in 0.35h on v5e-64 / 0.09h on v5e-256; 175B in 1.2h on a 256-chip pod — same scaling shape, different silicon/memory (`e2e_time`) |
+| Table 3: 13B trainable on one 80G GPU via state trimming | memory model reproduces the ordering: full AdamW ~0.9B/16G chip, LoRA-class trimming ~6B/16G, 13B at 48-80G (`max_model_size`) |
+| Fig. 6: effective throughput peaks mid-size, gen phase far below peak | reproduced by the blend model (`effective_throughput`) |
+| Fig. 7: super-linear then sub-linear scaling (ZeRO memory headroom vs global-batch cap) | reproduced by the scaling model (`scalability`) |
+| 3-stage pipeline trains end-to-end | measured: SFT loss falls, RM pairwise acc >0.7, PPO runs with EMA+mixture (tests + `examples/rlhf_e2e.py`) |
+
+## Methodology — how the numbers below are produced
+
+- **Dry-run**: every (arch x shape x mesh) is `jax.jit(step).lower(...)
+  .compile()` with `ShapeDtypeStruct` inputs on 512 host-platform
+  placeholder devices (no allocation).  Failures would be sharding bugs;
+  all 80 combos compile.
+- **FLOPs/bytes**: XLA's `cost_analysis()` counts every `scan` body ONCE
+  (a 36-layer x 8-microbatch graph under-reports ~300x), so the roofline
+  uses `launch/cost_walker.py`: a jaxpr walker that multiplies through
+  scan trip counts (exact dot FLOPs; fusion-aware byte estimate where
+  scatter/in-place-update traffic = update bytes, not buffer bytes).
+- **Collectives**: parsed from the partitioned `compiled.as_text()` and
+  multiplied by enclosing while-loop trip counts.
+- **Terms**: compute = FLOPs/dev / 197e12; memory = bytes/dev / 819e9;
+  collective = collective-bytes/dev / 50e9.  MODEL_FLOPS = 6(train) or
+  2(decode/prefill) x N_active x tokens, vocab-axis params excluded.
+- **Known artifact**: XLA-CPU promotes some loop-carried bf16 buffers to
+  f32 (hoisted converts) — inflates `mem/chip` for a few decode combos;
+  the jaxpr byte accounting is backend-neutral.  Three combos sit at
+  16-21 GiB estimated peak (llama4-scout train/decode, musicgen decode);
+  scout-train is fixed by the micro=16 perf iteration below, the decode
+  pair by int8 KV (both recorded in §Perf).
+
+"""
+
+
+def main():
+    parts = [HEADER]
+    parts.append("## §Dry-run\n")
+    parts.append(RL.dryrun_table("16x16"))
+    parts.append("\n")
+    parts.append(RL.dryrun_table("2x16x16"))
+    parts.append("\n## §Roofline\n")
+    parts.append("Baselines for ALL 40 (arch x shape) pairs — paper-"
+                 "faithful configuration (ZeRO-3+TP training with 8 "
+                 "gradient microbatches; TP+EP bf16 inference).\n")
+    parts.append(RL.markdown_table("16x16"))
+    parts.append("\n")
+    parts.append(RL.markdown_table("2x16x16"))
+    # optimized (tagged) runs — §Perf artifacts
+    opt_paths = sorted(p for p in glob.glob("experiments/dryrun/*.json")
+                       if p.count("__") == 3 and "rlhf" not in p)
+    if opt_paths:
+        parts.append("\n### Optimized-variant artifacts (see §Perf)\n")
+        parts.append("| arch | shape | mesh | variant | C s | M s | X s |"
+                     " mem GiB |")
+        parts.append("|---|---|---|---|---|---|---|---|")
+        for p in opt_paths:
+            with open(p) as f:
+                r = json.load(f)
+            tag = os.path.basename(p).split("__")[-1].replace(".json", "")
+            parts.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {tag} "
+                f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+                f"| {r['collective_s']:.3e} "
+                f"| {r['memory']['peak_est_bytes']/2**30:.2f} |")
+
+    # stage-3 RLHF dry-runs (the paper's own workload)
+    rl_paths = sorted(glob.glob("experiments/dryrun/rlhf_stage3__*.json"))
+    if rl_paths:
+        parts.append("\n## §Dry-run (stage-3 RLHF — the paper's workload)\n")
+        parts.append(
+            "One PPO iteration's training half (actor clipped-surrogate "
+            "update + critic value update over a 512-token experience "
+            "batch; 13.6B-params actor + 350M reward, `dryrun_rlhf.py`). "
+            "Generation half = the decode dry-runs above (Hybrid Engine "
+            "runs it as serving).  Paper's Table-2 scale claim (175B "
+            "trainable on 64 A100-80G) maps to: fits a 256-chip v5e pod "
+            "at PPO minibatch 16.\n")
+        parts.append("| actor | PPO minibatch | compile s | mem/chip GiB |"
+                     " fits 16G | C s | M s | X s |")
+        parts.append("|---|---|---|---|---|---|---|---|")
+        for p in rl_paths:
+            with open(p) as f:
+                r = json.load(f)
+            m = r["mem_per_chip_gib"]
+            parts.append(
+                f"| {r['actor']} | {r['batch']} | {r['compile_s']:.1f} "
+                f"| {m:.2f} | {'yes' if m <= 16 else 'NO'} "
+                f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+                f"| {r['collective_s']:.3e} |")
+    perf = "experiments/PERF.md"
+    parts.append("\n## §Perf\n")
+    if os.path.exists(perf):
+        parts.append(open(perf).read())
+    else:
+        parts.append("(perf iterations pending)\n")
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(parts))
+    print("wrote EXPERIMENTS.md",
+          os.path.getsize("EXPERIMENTS.md"), "bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each assigned architecture lives in its own module (``configs/<id>.py``,
+dashes -> underscores) exposing ``CONFIG``; ``reduced(cfg)`` builds the
+smoke-test variant (≤2 layers, d_model ≤ 512, ≤4 experts) of the same
+family for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_ARCH_IDS = [
+    "qwen3-8b",
+    "musicgen-medium",
+    "yi-9b",
+    "llama3.2-3b",
+    "llama4-scout-17b-a16e",
+    "mamba2-370m",
+    "zamba2-1.2b",
+    "deepseek-v2-lite-16b",
+    "smollm-135m",
+    "llama-3.2-vision-11b",
+]
+
+
+def _module_name(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+
+
+ARCHS = {}
+for _a in _ARCH_IDS:
+    ARCHS[_a] = importlib.import_module(_module_name(_a)).CONFIG
+
+
+def list_archs():
+    return list(ARCHS)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id in ARCHS:
+        return ARCHS[arch_id]
+    from repro.configs import opt_family
+    if arch_id in opt_family.OPT_CONFIGS:
+        return opt_family.OPT_CONFIGS[arch_id]
+    raise KeyError(f"unknown arch {arch_id!r}; known: {list(ARCHS)} + "
+                   f"{list(opt_family.OPT_CONFIGS)}")
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests."""
+    kw = dict(
+        n_layers=2, d_model=min(cfg.d_model, 256),
+        vocab_size=min(cfg.vocab_size, 512),
+        compute_dtype="float32", remat=False, logit_chunk=0,
+    )
+    if cfg.n_heads:
+        kw["n_heads"] = min(cfg.n_heads, 4)
+        kw["n_kv_heads"] = max(1, min(cfg.n_kv_heads,
+                                      kw["n_heads"] // 2) or 1)
+        kw["head_dim"] = 32
+        kw["d_ff"] = min(cfg.d_ff, 512) if cfg.d_ff else 0
+    if cfg.moe:
+        kw["n_experts"] = min(cfg.n_experts, 4)
+        kw["top_k"] = min(cfg.top_k, 2)
+        kw["moe_d_ff"] = min(cfg.moe_d_ff, 128)
+        kw["capacity_factor"] = 2.0
+    if cfg.mla:
+        kw["kv_lora_rank"] = 64
+        kw["qk_nope_head_dim"] = 32
+        kw["qk_rope_head_dim"] = 16
+        kw["v_head_dim"] = 32
+    if cfg.ssm_state:
+        kw["ssm_state"] = min(cfg.ssm_state, 32)
+        kw["ssm_headdim"] = 32
+        kw["ssm_chunk"] = 32
+    if cfg.attn_every:
+        kw["n_layers"] = cfg.attn_every  # one full hybrid unit
+    if cfg.cross_attn_every:
+        kw["n_layers"] = cfg.cross_attn_every
+        kw["encoder_dim"] = min(cfg.encoder_dim, 128)
+        kw["encoder_len"] = min(cfg.encoder_len, 16)
+    if cfg.sliding_window:
+        kw["sliding_window"] = min(cfg.sliding_window, 64)
+    return cfg.replace(name=cfg.name + "-reduced", **kw)

@@ -1,0 +1,9 @@
+"""The paper's primary contribution: Hybrid Engine + 3-stage RLHF pipeline
+(PPO with EMA collection, mixture training, LoRA) as composable JAX."""
+from repro.core import ema, experience, lora
+from repro.core.hybrid_engine import HybridEngine
+from repro.core.pipeline import RLHFEngine, RLHFPipeline, StageConfig
+from repro.core.ppo import PPOConfig, PPOTrainer
+
+__all__ = ["ema", "experience", "lora", "HybridEngine", "RLHFEngine",
+           "RLHFPipeline", "StageConfig", "PPOConfig", "PPOTrainer"]

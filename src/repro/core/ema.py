@@ -1,0 +1,22 @@
+"""Exponential Moving Average collection (InstructGPT/DS-Chat optional
+feature 1): a sharded shadow of the actor params updated every PPO step;
+the EMA checkpoint is what ships."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params):
+    return jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+
+@jax.jit
+def update(ema, params, decay: float = 0.992):
+    return jax.tree.map(
+        lambda e, p: decay * e + (1.0 - decay) * p.astype(jnp.float32),
+        ema, params)
+
+
+def to_params(ema, like):
+    return jax.tree.map(lambda e, p: e.astype(p.dtype), ema, like)

@@ -1,0 +1,62 @@
+"""Experience construction for PPO: per-token KL-shaped rewards + GAE.
+
+Follows DeepSpeed-Chat / InstructGPT:
+  r_t      = -kl_coef * (logp_actor - logp_ref)          (every token)
+  r_last  += clip(reward_score, ±clip_reward)             (final token)
+  A_t      = GAE(gamma, lam) over the response region
+  R_t      = A_t + V_t
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Experience(NamedTuple):
+    sequences: jnp.ndarray      # (B, T) int32  prompt + response
+    logprobs: jnp.ndarray       # (B, T-1) actor logprobs at generation time
+    ref_logprobs: jnp.ndarray   # (B, T-1)
+    values: jnp.ndarray         # (B, T-1) critic values at generation time
+    rewards: jnp.ndarray        # (B, T-1) KL-shaped per-token rewards
+    advantages: jnp.ndarray     # (B, T-1)
+    returns: jnp.ndarray        # (B, T-1)
+    mask: jnp.ndarray           # (B, T-1) response-token mask (float)
+
+
+def kl_rewards(logprobs, ref_logprobs, mask, score, *, kl_coef=0.1,
+               clip_reward=5.0):
+    r = -kl_coef * (logprobs - ref_logprobs) * mask
+    # add clipped env reward at the last valid response token
+    last = jnp.maximum(mask.sum(-1) - 1, 0).astype(jnp.int32)
+    first_resp = jnp.argmax(mask, axis=-1)
+    last_idx = first_resp + last
+    bonus = jnp.clip(score, -clip_reward, clip_reward)
+    r = r.at[jnp.arange(r.shape[0]), last_idx].add(bonus * (mask.sum(-1) > 0))
+    return r
+
+
+def gae(rewards, values, mask, *, gamma=1.0, lam=0.95):
+    """Generalized advantage estimation, right-to-left scan, masked."""
+    B, T = rewards.shape
+
+    def step(carry, xs):
+        adv_next, v_next = carry
+        r, v, m = xs
+        delta = r + gamma * v_next * m - v
+        adv = delta + gamma * lam * adv_next * m
+        # outside the response region, carry through unchanged
+        adv = adv * m
+        return (adv, v * m + v_next * (1 - m)), adv
+
+    xs = (rewards.T[::-1], values.T[::-1], mask.T[::-1])
+    (_, _), advs = jax.lax.scan(step, (jnp.zeros(B), jnp.zeros(B)), xs)
+    advantages = advs[::-1].T * mask
+    returns = advantages + values * mask
+    # normalize advantages over response tokens (standard PPO practice)
+    n = jnp.maximum(mask.sum(), 1.0)
+    mean = (advantages * mask).sum() / n
+    var = ((advantages - mean) ** 2 * mask).sum() / n
+    advantages = (advantages - mean) * jax.lax.rsqrt(var + 1e-8) * mask
+    return advantages, returns

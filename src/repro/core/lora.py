@@ -1,0 +1,68 @@
+"""LoRA (DS-Chat's memory optimization for RL training).
+
+Functional formulation: adapters live in a parallel pytree
+``{path: {"a": (in, r), "b": (r, out)}}`` targeting 2D projection weights;
+``merge`` produces effective params ``stop_grad(W) + (alpha/r)·A@B`` so a
+single ``jax.grad`` over the adapter tree trains only the adapters while
+the frozen base never receives gradients or optimizer state (the memory
+win the paper uses to fit 13B on one GPU).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_TARGETS = r"(wq|wk|wv|wo|w_gate|w_up|w_down|w_in|w_out)$"
+
+
+def _target_paths(params, pattern: str):
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        # only plain 2D (or layer-stacked 3D) matrices
+        if re.search(pattern, key) and leaf.ndim in (2, 3):
+            out.append((key, leaf.shape, leaf.dtype))
+    return out
+
+
+def init(params, rank: int, key, pattern: str = DEFAULT_TARGETS) -> Dict:
+    adapters = {}
+    targets = _target_paths(params, pattern)
+    keys = jax.random.split(key, len(targets))
+    for (path, shape, dtype), k in zip(targets, keys):
+        *lead, din, dout = shape
+        a = (jax.random.normal(k, (*lead, din, rank))
+             / np.sqrt(din)).astype(dtype)
+        b = jnp.zeros((*lead, rank, dout), dtype)
+        adapters[path] = {"a": a, "b": b}
+    return adapters
+
+
+def merge(params, adapters: Dict, alpha: float = 16.0):
+    """Effective params; gradients flow only into ``adapters``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        base = jax.lax.stop_gradient(leaf)
+        if key in adapters:
+            ad = adapters[key]
+            r = ad["a"].shape[-1]
+            delta = (alpha / r) * jnp.einsum("...ir,...ro->...io",
+                                             ad["a"], ad["b"])
+            leaves.append(base + delta.astype(base.dtype))
+        else:
+            leaves.append(base)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def fold(params, adapters: Dict, alpha: float = 16.0):
+    """Permanently fold adapters into the base weights (export path)."""
+    merged = merge(params, adapters, alpha)
+    return jax.tree.map(lambda x: x, merged)

@@ -1,0 +1,148 @@
+"""Full-fledged 3-step RLHF pipeline (InstructGPT / DeepSpeed-Chat Fig. 1):
+
+  Step 1  SFT          — supervised finetuning on prompt+chosen
+  Step 2  RM           — pairwise reward-model finetuning
+  Step 3  PPO (RLHF)   — Hybrid-Engine PPO with optional EMA + mixture
+
+``RLHFEngine`` mirrors ``DeepSpeedRLHFEngine``: it owns the four models
+(actor, ref, critic, reward) and the Hybrid Engine; ``RLHFPipeline.run``
+is the single-script experience of §2.1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lora as LoRA
+from repro.core.hybrid_engine import HybridEngine
+from repro.core.ppo import PPOConfig, PPOTrainer
+from repro.data.blending import DataBlender
+from repro.models import reward as R
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.training import schedules
+from repro.training.steps import lm_train_step, reward_train_step
+from repro.training.train_state import TrainState
+
+
+@dataclasses.dataclass
+class StageConfig:
+    sft_steps: int = 50
+    sft_batch: int = 8
+    sft_lr: float = 3e-4
+    rm_steps: int = 50
+    rm_batch: int = 8
+    rm_lr: float = 3e-4
+    ppo_steps: int = 30
+    ppo_batch: int = 8
+    seed: int = 0
+
+
+class RLHFEngine:
+    """Owns actor/ref/critic/reward params + the Hybrid Engine."""
+
+    def __init__(self, actor_cfg: ModelConfig, critic_cfg: ModelConfig,
+                 key, mesh=None, train_strategy="zero3"):
+        self.actor_cfg, self.critic_cfg = actor_cfg, critic_cfg
+        k1, k2 = jax.random.split(key)
+        self.actor_params = T.init_params(actor_cfg, k1)
+        self.critic_params = R.init_params(critic_cfg, k2)
+        self.ref_params = None       # snapshotted from SFT actor
+        self.reward_params = None    # snapshotted from trained RM
+        self.hybrid = (HybridEngine(actor_cfg, mesh,
+                                    train_strategy=train_strategy)
+                       if mesh is not None else None)
+
+
+class RLHFPipeline:
+    def __init__(self, engine: RLHFEngine, blender: DataBlender,
+                 stages: StageConfig, ppo: PPOConfig):
+        self.e = engine
+        self.blender = blender
+        self.stages = stages
+        self.ppo = ppo
+        self.log = {"stage1": [], "stage2": [], "stage3": []}
+        self.timings = {}
+
+    # ------------------------- Step 1: SFT ------------------------- #
+    def run_sft(self):
+        cfg, st = self.e.actor_cfg, self.stages
+        state = TrainState.create(self.e.actor_params)
+        lr = schedules.cosine_warmup(st.sft_lr, st.sft_steps // 10 + 1,
+                                     st.sft_steps)
+        step_fn = jax.jit(partial(lm_train_step, cfg))
+        t0 = time.perf_counter()
+        for i, batch in enumerate(self.blender.sft_batches(
+                st.sft_batch, st.sft_steps)):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            state, m = step_fn(state, batch, lr(i))
+            self.log["stage1"].append(float(m["loss"]))
+        self.timings["stage1"] = time.perf_counter() - t0
+        self.e.actor_params = state.params
+        self.e.ref_params = jax.tree.map(lambda x: x, state.params)
+        return self.log["stage1"]
+
+    # ----------------------- Step 2: Reward ------------------------ #
+    def run_reward(self):
+        cfg, st = self.e.critic_cfg, self.stages
+        state = TrainState.create(self.e.critic_params)
+        lr = schedules.cosine_warmup(st.rm_lr, st.rm_steps // 10 + 1,
+                                     st.rm_steps)
+        step_fn = jax.jit(partial(reward_train_step, cfg))
+        accs = []
+        t0 = time.perf_counter()
+        for i, batch in enumerate(self.blender.reward_batches(
+                st.rm_batch, st.rm_steps)):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            state, m = step_fn(state, batch, lr(i))
+            self.log["stage2"].append(float(m["rm_loss"]))
+            accs.append(float(m["rm_acc"]))
+        self.timings["stage2"] = time.perf_counter() - t0
+        self.e.reward_params = state.params
+        self.e.critic_params = jax.tree.map(lambda x: x, state.params)
+        return accs
+
+    # ------------------------ Step 3: PPO -------------------------- #
+    def run_ppo(self, key=None):
+        st = self.stages
+        key = key if key is not None else jax.random.PRNGKey(st.seed + 3)
+        trainer = PPOTrainer(
+            actor_cfg=self.e.actor_cfg, critic_cfg=self.e.critic_cfg,
+            actor_params=self.e.actor_params,
+            critic_params=self.e.critic_params,
+            ref_params=self.e.ref_params,
+            reward_params=self.e.reward_params,
+            ppo=self.ppo, engine=self.e.hybrid)
+        ptx_iter = (self.blender.pretrain_batches(st.ppo_batch, st.ppo_steps)
+                    if self.ppo.ptx_coef > 0 else None)
+        scores = []
+        t0 = time.perf_counter()
+        for i, batch in enumerate(self.blender.prompt_batches(
+                st.ppo_batch, st.ppo_steps)):
+            key, k = jax.random.split(key)
+            exp, gm = trainer.generate_experience(
+                jnp.asarray(batch["prompts"]), k)
+            ptx = None
+            if ptx_iter is not None:
+                ptx = {k2: jnp.asarray(v) for k2, v in next(ptx_iter).items()}
+            tm = trainer.train_rlhf(exp, ptx)
+            scores.append(gm["reward_score"])
+            self.log["stage3"].append({**gm, **tm})
+        self.timings["stage3"] = time.perf_counter() - t0
+        self.e.actor_params = trainer.actor.params
+        self.trainer = trainer
+        return scores
+
+    # --------------------------- driver ---------------------------- #
+    def run(self, key=None):
+        sft = self.run_sft()
+        accs = self.run_reward()
+        scores = self.run_ppo(key)
+        return {"sft_loss": sft, "rm_acc": accs, "ppo_scores": scores,
+                "timings": self.timings}

@@ -1,0 +1,180 @@
+"""PPO trainer — the ``DeepSpeedPPOTrainer`` analogue.
+
+    trainer = PPOTrainer(engine=rlhf_engine, ppo=PPOConfig(...))
+    for batch in prompt_loader:
+        exp = trainer.generate_experience(batch, key)   # inference phase
+        metrics = trainer.train_rlhf(exp)               # training phase
+
+``generate_experience`` runs under the Hybrid Engine's TP layout;
+``train_rlhf`` under ZeRO-3.  Losses follow DeepSpeed-Chat / InstructGPT:
+clipped surrogate for the actor (+ optional pretrain-mixture term),
+clipped value loss for the critic, EMA collection of actor weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ema as EMA
+from repro.core import experience as X
+from repro.core.hybrid_engine import HybridEngine
+from repro.models import reward as R
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.generate import generate
+from repro.training.steps import lm_loss_fn
+from repro.training.train_state import TrainState
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    max_new_tokens: int = 32
+    temperature: float = 1.0
+    top_k: int = 0
+    kl_coef: float = 0.1
+    clip_eps: float = 0.2
+    value_clip: float = 0.2
+    clip_reward: float = 5.0
+    gamma: float = 1.0
+    lam: float = 0.95
+    lr_actor: float = 1e-5
+    lr_critic: float = 5e-6
+    ptx_coef: float = 0.0          # mixture training weight (0 = off)
+    ema_decay: float = 0.992
+    use_ema: bool = True
+
+
+# ===================================================================== #
+# Pure loss / step functions (jitted once per shape)
+# ===================================================================== #
+def actor_logprobs(cfg: ModelConfig, params, sequences):
+    hidden, _, _ = T.forward(cfg, params, tokens=sequences, mode="full")
+    return T.per_token_logprobs(cfg, params, hidden[:, :-1],
+                                sequences[:, 1:])
+
+
+def actor_loss_fn(cfg: ModelConfig, ppo: PPOConfig, params, exp: X.Experience,
+                  ptx_batch=None):
+    logp = actor_logprobs(cfg, params, exp.sequences)
+    ratio = jnp.exp(logp - exp.logprobs)
+    a = exp.advantages
+    l1 = -a * ratio
+    l2 = -a * jnp.clip(ratio, 1 - ppo.clip_eps, 1 + ppo.clip_eps)
+    n = jnp.maximum(exp.mask.sum(), 1.0)
+    pg_loss = (jnp.maximum(l1, l2) * exp.mask).sum() / n
+    loss = pg_loss
+    metrics = {"pg_loss": pg_loss,
+               "ratio_mean": (ratio * exp.mask).sum() / n,
+               "approx_kl": ((exp.logprobs - logp) * exp.mask).sum() / n}
+    if ptx_batch is not None and ppo.ptx_coef > 0:
+        ptx, _ = lm_loss_fn(cfg, params, ptx_batch)
+        loss = loss + ppo.ptx_coef * ptx
+        metrics["ptx_loss"] = ptx
+    return loss, metrics
+
+
+def critic_loss_fn(cfg: ModelConfig, ppo: PPOConfig, params,
+                   exp: X.Experience):
+    v = R.values(cfg, params, exp.sequences)[:, :-1]
+    v_clip = exp.values + jnp.clip(v - exp.values, -ppo.value_clip,
+                                   ppo.value_clip)
+    n = jnp.maximum(exp.mask.sum(), 1.0)
+    l = jnp.maximum((v - exp.returns) ** 2, (v_clip - exp.returns) ** 2)
+    loss = 0.5 * (l * exp.mask).sum() / n
+    return loss, {"v_loss": loss,
+                  "v_mean": (v * exp.mask).sum() / n}
+
+
+def actor_step(cfg: ModelConfig, ppo: PPOConfig, state: TrainState,
+               exp: X.Experience, ptx_batch=None):
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: actor_loss_fn(cfg, ppo, p, exp, ptx_batch),
+        has_aux=True)(state.params)
+    state, gnorm = state.apply_gradients(grads, lr=ppo.lr_actor)
+    return state, dict(metrics, actor_loss=loss, actor_gnorm=gnorm)
+
+
+def critic_step(cfg: ModelConfig, ppo: PPOConfig, state: TrainState,
+                exp: X.Experience):
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: critic_loss_fn(cfg, ppo, p, exp),
+        has_aux=True)(state.params)
+    state, gnorm = state.apply_gradients(grads, lr=ppo.lr_critic)
+    return state, dict(metrics, critic_gnorm=gnorm)
+
+
+def make_experience(actor_cfg: ModelConfig, critic_cfg: ModelConfig,
+                    ppo: PPOConfig, actor_params, ref_params, critic_params,
+                    reward_params, sequences, response_mask) -> X.Experience:
+    """Score a generated batch: logprobs, ref logprobs, values, rewards,
+    GAE.  Pure function — jitted by the trainer; also the dry-run's
+    'experience scoring' graph."""
+    logp = actor_logprobs(actor_cfg, actor_params, sequences)
+    ref_logp = actor_logprobs(actor_cfg, ref_params, sequences)
+    values = R.values(critic_cfg, critic_params, sequences)[:, :-1]
+    attn_mask = jnp.ones(sequences.shape, jnp.float32)
+    score = R.end_scores(critic_cfg, reward_params, sequences, attn_mask)
+    mask = response_mask[:, 1:].astype(jnp.float32)
+    rewards = X.kl_rewards(logp, ref_logp, mask, score,
+                           kl_coef=ppo.kl_coef,
+                           clip_reward=ppo.clip_reward)
+    adv, ret = X.gae(rewards, values, mask, gamma=ppo.gamma, lam=ppo.lam)
+    return X.Experience(sequences=sequences, logprobs=logp,
+                        ref_logprobs=ref_logp, values=values,
+                        rewards=rewards, advantages=adv, returns=ret,
+                        mask=mask), score
+
+
+# ===================================================================== #
+# Trainer
+# ===================================================================== #
+class PPOTrainer:
+    def __init__(self, *, actor_cfg: ModelConfig, critic_cfg: ModelConfig,
+                 actor_params, critic_params, ref_params, reward_params,
+                 ppo: PPOConfig, engine: Optional[HybridEngine] = None):
+        self.actor_cfg, self.critic_cfg, self.ppo = actor_cfg, critic_cfg, ppo
+        self.actor = TrainState.create(actor_params)
+        self.critic = TrainState.create(critic_params)
+        self.ref_params = ref_params
+        self.reward_params = reward_params
+        self.engine = engine
+        self.ema = EMA.init(actor_params) if ppo.use_ema else None
+
+        self._gen = jax.jit(partial(
+            generate, actor_cfg, max_new_tokens=ppo.max_new_tokens,
+            temperature=ppo.temperature, top_k=ppo.top_k),
+            static_argnames=())
+        self._mk_exp = jax.jit(partial(make_experience, actor_cfg,
+                                       critic_cfg, ppo))
+        self._actor_step = jax.jit(partial(actor_step, actor_cfg, ppo))
+        self._critic_step = jax.jit(partial(critic_step, critic_cfg, ppo))
+
+    # -------------------------------------------------------------- #
+    def generate_experience(self, prompts, key):
+        """Inference phase (Hybrid Engine: TP layout)."""
+        params = self.actor.params
+        if self.engine is not None:
+            params = self.engine.to_inference(params)
+        out = self._gen(params, prompts, key)
+        exp, score = self._mk_exp(self.actor.params, self.ref_params,
+                                  self.critic.params, self.reward_params,
+                                  out["sequences"], out["response_mask"])
+        return exp, {"reward_score": float(score.mean()),
+                     "gen_len": float(out["response_mask"].sum(1).mean())}
+
+    def train_rlhf(self, exp: X.Experience, ptx_batch=None):
+        """Training phase (ZeRO layout)."""
+        self.actor, am = self._actor_step(self.actor, exp, ptx_batch)
+        self.critic, cm = self._critic_step(self.critic, exp)
+        if self.ema is not None:
+            self.ema = EMA.update(self.ema, self.actor.params,
+                                  self.ppo.ema_decay)
+        return {**{k: float(v) for k, v in am.items()},
+                **{k: float(v) for k, v in cm.items()}}
+
+    def ema_params(self):
+        return EMA.to_params(self.ema, self.actor.params)

@@ -1,0 +1,9 @@
+from repro.data.blending import DataBlender, stage_split
+from repro.data.datasets import (SYNTHETIC_DATASETS, CopyTaskDataset,
+                                 PromptDataset, SortTaskDataset,
+                                 ConstantTaskDataset)
+from repro.data.tokenizer import ByteTokenizer
+
+__all__ = ["DataBlender", "stage_split", "SYNTHETIC_DATASETS",
+           "CopyTaskDataset", "PromptDataset", "SortTaskDataset",
+           "ConstantTaskDataset", "ByteTokenizer"]

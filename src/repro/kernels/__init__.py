@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the RLHF hot spots.
+
+DeepSpeed-Chat's generation-phase speedup comes from inference-adapted
+CUDA kernels; the TPU-native analogues here are:
+
+- ``flash_attention``  — prefill/train attention, VMEM-tiled online softmax
+- ``flash_attention_bwd`` — FA2-style backward (dKV + dQ kernels, lse/delta
+                         recompute) wired into a custom_vjp in ops.py
+- ``decode_attention`` — single-token GQA attention over a long KV cache
+                         (THE memory-bandwidth-bound RLHF generation loop)
+- ``rmsnorm``          — fused normalization (bandwidth-bound elementwise)
+- ``ssd_scan``         — Mamba2 SSD intra-chunk kernel
+
+Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jit'd
+dispatch wrapper in ``ops.py`` that runs ``interpret=True`` off-TPU so the
+whole suite validates on CPU.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,94 @@
+"""Pallas TPU flash-decode: single-token GQA attention over a KV cache.
+
+This is the paper's RLHF generation hot loop — one query token per
+sequence attends to S cached keys; arithmetic intensity is O(1) so the
+kernel is purely HBM-bandwidth-bound and the goal is to stream K/V tiles
+through VMEM exactly once at full bandwidth.
+
+Tiling: grid = (B, KV, ns); the KV length is the sequential axis with
+online-softmax scratch carried across tiles (the TPU analogue of GPU
+split-KV decode kernels).  The G query heads of a KV group ride along in
+one (G, D) tile so each K/V byte loaded serves all G heads (GQA's whole
+point — it multiplies effective bandwidth by G).
+
+Layout: q: (B, KV, G, D); k/v cache: (B, KV, S, D); valid: (B, S) bool
+(ring-buffer validity — RoPE is pre-applied so slot order is free).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, ns):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)              # (sb, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    valid = valid_ref[0]                             # (sb,)
+    G, D = q.shape
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (1.0 / np.sqrt(D))                       # (G, sb)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == ns - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k_cache, v_cache, valid, *, s_block=512,
+                         interpret=False):
+    """q: (B, KV, G, D); k/v: (B, KV, S, D); valid: (B, S) bool."""
+    B, KV, G, D = q.shape
+    S = k_cache.shape[2]
+    s_block = min(s_block, S)
+    assert S % s_block == 0, (S, s_block)
+    ns = S // s_block
+    grid = (B, KV, ns)
+
+    kernel = functools.partial(_kernel, ns=ns)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, s_block, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, s_block, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, s_block), lambda b, h, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, valid)

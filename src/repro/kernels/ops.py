@@ -1,0 +1,173 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+These are the entry points the model layer calls when ``cfg.use_pallas``;
+off-TPU they run the kernels in ``interpret=True`` mode (Python execution
+of the kernel body) so correctness is CPU-verifiable.  Layout adaptation
+between the model's (B, L, H, D) convention and the kernels' grouped
+(B, KV, G, ...) convention happens here.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_attention_bwd as _fab
+from repro.kernels import rmsnorm as _rms
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_block=256,
+                    k_block=512):
+    """q: (B, L, H, D); k, v: (B, Lk, KV, D) -> (B, L, H, D)."""
+    B, Lq, H, D = q.shape
+    Lk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q5 = jnp.moveaxis(q.reshape(B, Lq, KV, G, D), 1, 3)   # (B,KV,G,Lq,D)
+    k4 = jnp.moveaxis(k, 1, 2)                            # (B,KV,Lk,D)
+    v4 = jnp.moveaxis(v, 1, 2)
+    qb = _pick_block(Lq, q_block)
+    kb = _pick_block(Lk, k_block)
+    o = _fa.flash_attention_fwd(q5, k4, v4, causal=causal, window=window,
+                                q_block=qb, k_block=kb,
+                                interpret=_interpret())
+    return jnp.moveaxis(o, 3, 1).reshape(B, Lq, H, D)
+
+
+def decode_attention(q, k_cache, v_cache, valid):
+    """q: (B, H, D); caches: (B, S, KV, D); valid: (B, S)."""
+    B, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    q4 = q.reshape(B, KV, G, D)
+    k4 = jnp.moveaxis(k_cache, 1, 2)
+    v4 = jnp.moveaxis(v_cache, 1, 2)
+    sb = _pick_block(S, 512)
+    o = _dec.decode_attention_fwd(q4, k4, v4, valid, s_block=sb,
+                                  interpret=_interpret())
+    return o.reshape(B, H, D)
+
+
+def rmsnorm(x, w, *, eps=1e-5):
+    shape = x.shape
+    R = 1
+    for d in shape[:-1]:
+        R *= d
+    x2d = x.reshape(R, shape[-1])
+    rb = _pick_block(R, 256)
+    o = _rms.rmsnorm_fwd(x2d, w, eps=eps, row_block=rb,
+                         interpret=_interpret())
+    return o.reshape(shape)
+
+
+def ssd_scan(X, dt, A, B, C, chunk, initial_state=None):
+    """Full SSD: Pallas intra-chunk kernel + jnp inter-chunk recurrence.
+
+    X: (b, l, h, p)  dt: (b, l, h)  A: (h,)  B, C: (b, l, n).
+    Returns (Y (b,l,h,p), final_state (b,h,p,n)) — same contract as the
+    jnp path in repro.models.modules.ssd_chunked.
+    """
+    b, l, h, p = X.shape
+    n = B.shape[-1]
+    q = min(chunk, l)
+    nc = -(-l // q)
+    pad = nc * q - l
+    if pad:
+        X = jnp.pad(X, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Xc = X.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, n)
+    Cc = C.reshape(b, nc, q, n)
+
+    Y_diag, S_c, A_cs = _ssd.ssd_intra_fwd(Xc, dtc, A, Bc, Cc,
+                                           interpret=_interpret())
+    chunk_decay = jnp.exp(A_cs[..., -1])                # (b,nc,h)
+
+    def step(s, xs):
+        sc, dec = xs
+        s_out = s
+        s_next = s * dec[..., None, None] + sc
+        return s_next, s_out
+
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, h, p, n), jnp.float32))
+    final, states_in = jax.lax.scan(
+        step, s0, (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)           # (b,nc,h,p,n)
+    Y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp", Cc.astype(jnp.float32),
+                       states_in, jnp.exp(A_cs))
+    Y = (Y_diag.astype(jnp.float32) + Y_off).reshape(b, nc * q, h, p)[:, :l]
+    return Y.astype(X.dtype), final
+
+
+def _pick_block(total: int, preferred: int) -> int:
+    """Largest divisor of ``total`` that is <= preferred."""
+    blk = min(preferred, total)
+    while total % blk:
+        blk -= 1
+    return blk
+
+
+# ===================================================================== #
+# Differentiable Pallas attention (fwd + bwd kernels, custom VJP) — the
+# TPU TRAINING path.  Grouped layout: q (B, KV, G, Lq, D), k/v
+# (B, KV, Lk, D).
+# ===================================================================== #
+def flash_attention_grouped(q, k, v, *, causal=True, window=None,
+                            q_block=256, k_block=256):
+    meta = (bool(causal), window,
+            _pick_block(q.shape[3], q_block),
+            _pick_block(k.shape[2], k_block))
+    return _flash_pallas(meta, q, k, v)
+
+
+def _fwd_with_lse(meta, q, k, v):
+    """Forward kernel + lse recovery.  The fwd kernel keeps (m, l) in
+    scratch; for the residual we recompute lse with the jnp oracle's
+    blocked pass (cheap relative to bwd, avoids a second kernel output
+    plumbing in interpret mode)."""
+    causal, window, qb, kb = meta
+    out = _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                  q_block=qb, k_block=kb,
+                                  interpret=_interpret())
+    B, KV, G, Lq, D = q.shape
+    from repro.models.modules import _flash_fwd_impl
+    qm = jnp.moveaxis(q, 3, 1).reshape(B, Lq, KV * G, D)
+    km = jnp.moveaxis(k, 2, 1)
+    vm = jnp.moveaxis(v, 2, 1)
+    _, lse = _flash_fwd_impl((causal, window, qb, kb,
+                              k.shape[2] - Lq), qm, km, vm)
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_pallas(meta, q, k, v):
+    return _fwd_with_lse(meta, q, k, v)[0]
+
+
+def _flash_pallas_fwd(meta, q, k, v):
+    out, lse = _fwd_with_lse(meta, q, k, v)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_pallas_bwd(meta, res, g):
+    causal, window, qb, kb = meta
+    q, k, v, out, lse = res
+    delta = jnp.sum(g.astype(jnp.float32) * out.astype(jnp.float32), -1)
+    dq, dk, dv = _fab.flash_attention_bwd(
+        q, k, v, g, lse, delta, causal=causal, window=window,
+        q_block=qb, k_block=kb, interpret=_interpret())
+    return dq, dk, dv
+
+
+_flash_pallas.defvjp(_flash_pallas_fwd, _flash_pallas_bwd)

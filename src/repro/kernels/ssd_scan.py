@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for the Mamba2 SSD *intra-chunk* pass.
+
+The SSD chunked algorithm splits work into (a) O(L·q) intra-chunk matmuls
+— the compute hot spot, done here per (batch, chunk, head) grid cell with
+the (q, q) decay matrix built in VMEM — and (b) an O(L/q) inter-chunk
+state recurrence, which is inherently sequential and cheap, left to a
+``lax.scan`` in ops.py.  This mirrors how the original CUDA SSD kernel
+splits blocks, re-tiled for the MXU: the q x q decay matmul and the
+q x n state outer products are both MXU-shaped when q, n are multiples
+of 128/64.
+
+Per-cell outputs: Y_diag tile, chunk end-state S_c, cumulative decays.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+            y_ref, s_ref, acs_ref):
+    # blocks: x (1,1,q,1,p)  dt (1,1,q,1)  a (1,)  b/c (1,1,q,n)
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)     # (q, p)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)      # (q,)
+    A = a_ref[0].astype(jnp.float32)                 # scalar
+    B = b_ref[0, 0].astype(jnp.float32)              # (q, n)
+    C = c_ref[0, 0].astype(jnp.float32)              # (q, n)
+    q = x.shape[0]
+
+    dA = dt * A                                      # (q,)
+    a_cs = jnp.cumsum(dA)                            # (q,)
+    seg = a_cs[:, None] - a_cs[None, :]              # (q, q)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1))
+    ldec = jnp.where(tri, jnp.exp(seg), 0.0)
+
+    xd = x * dt[:, None]                             # (q, p)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    w = scores * ldec                                # (q, q)
+    y = jax.lax.dot_general(w, xd, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    decay_states = jnp.exp(a_cs[-1] - a_cs)          # (q,)
+    s_c = jax.lax.dot_general(xd * decay_states[:, None], B,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (p, n)
+
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+    s_ref[0, 0, 0] = s_c.astype(s_ref.dtype)
+    acs_ref[0, 0, 0] = a_cs.astype(acs_ref.dtype)
+
+
+def ssd_intra_fwd(X, dt, A, B, C, *, interpret=False):
+    """Intra-chunk SSD.
+
+    X: (b, nc, q, h, p)  dt: (b, nc, q, h)  A: (h,)  B, C: (b, nc, q, n)
+    Returns (Y_diag (b,nc,q,h,p), S_c (b,nc,h,p,n), A_cs (b,nc,h,q)).
+    """
+    b, nc, q, h, p = X.shape
+    n = B.shape[-1]
+    grid = (b, nc, h)
+    y, s_c, a_cs = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda i, c, j: (i, c, 0, j, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda i, c, j: (i, c, 0, j)),
+            pl.BlockSpec((1,), lambda i, c, j: (j,)),
+            pl.BlockSpec((1, 1, q, n), lambda i, c, j: (i, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, c, j: (i, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda i, c, j: (i, c, 0, j, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda i, c, j: (i, c, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda i, c, j: (i, c, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(X.shape, X.dtype),
+            jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, q), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X, dt, A, B, C)
+    return y, s_c, a_cs

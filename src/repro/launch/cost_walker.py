@@ -1,0 +1,251 @@
+"""Trip-count-aware cost accounting.
+
+``compiled.cost_analysis()`` counts every loop body ONCE — a scanned
+36-layer transformer with 8 gradient microbatches under-reports FLOPs by
+~300x.  Two correctors:
+
+1. ``jaxpr_cost(fn, args)`` — walks the (global, pre-partition) jaxpr,
+   multiplying through ``scan`` trip counts: exact dot FLOPs, plus a
+   fusion-aware byte estimate (outputs of non-fusible ops + argument
+   traffic), both GLOBAL (divide by chip count for per-device).
+2. ``collective_bytes_hlo(text)`` in dryrun parses the partitioned HLO —
+   ``collective_trip_corrected`` here multiplies each collective by the
+   trip count of its enclosing while-loop nest.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+# elementwise/layout ops assumed fused away for the byte estimate
+_FUSIBLE = {
+    "add", "sub", "mul", "div", "neg", "exp", "log", "tanh", "logistic",
+    "max", "min", "pow", "rsqrt", "sqrt", "abs", "sign", "floor",
+    "ceil", "round", "is_finite", "and", "or", "not", "xor",
+    "eq", "ne", "ge", "gt", "le", "lt", "select_n", "clamp",
+    "convert_element_type", "broadcast_in_dim", "reshape", "squeeze",
+    "transpose", "slice", "rev", "iota", "integer_pow", "stop_gradient",
+    "reduce_precision", "copy", "real", "imag", "erf", "erf_inv",
+    "expand_dims", "pad", "cos", "sin", "tan", "atan2", "cumsum",
+    "cumlogsumexp", "cummax", "cumprod",
+}
+
+_SUBJAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr")
+
+
+def _aval_bytes(v) -> int:
+    aval = v.aval
+    if not hasattr(aval, "shape"):
+        return 0
+    return int(np.prod(aval.shape, dtype=np.int64)) * aval.dtype.itemsize
+
+
+def _dot_flops(eqn) -> int:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval.shape
+    rhs = eqn.invars[1].aval.shape
+    batch = int(np.prod([lhs[i] for i in lb], dtype=np.int64)) if lb else 1
+    k = int(np.prod([lhs[i] for i in lc], dtype=np.int64)) if lc else 1
+    m = int(np.prod([d for i, d in enumerate(lhs)
+                     if i not in lc and i not in lb], dtype=np.int64))
+    n = int(np.prod([d for i, d in enumerate(rhs)
+                     if i not in rc and i not in rb], dtype=np.int64))
+    return 2 * batch * m * n * k
+
+
+def _conv_flops(eqn) -> int:
+    out = eqn.outvars[0].aval.shape
+    rhs = eqn.invars[1].aval.shape
+    return 2 * int(np.prod(out, dtype=np.int64)) * int(
+        np.prod(rhs[:-1], dtype=np.int64))
+
+
+_LOOK_THROUGH = {"convert_element_type", "optimization_barrier", "reshape",
+                 "transpose", "squeeze", "broadcast_in_dim"}
+
+
+def _source_bytes(v, producers, depth=8) -> int:
+    """HBM bytes actually read for operand ``v``: look through widening
+    converts / layout ops to the stored dtype (an int8 KV cache feeding a
+    f32 dot is read as int8 — TPU fuses the widening into the dot)."""
+    cur = v
+    for _ in range(depth):
+        eqn = producers.get(id(cur))
+        if eqn is None or eqn.primitive.name not in _LOOK_THROUGH:
+            break
+        cur = eqn.invars[0]
+        if not hasattr(cur, "aval"):
+            break
+    return min(_aval_bytes(v), _aval_bytes(cur)
+               if hasattr(cur, "aval") else _aval_bytes(v))
+
+
+def _walk(jaxpr) -> tuple:
+    flops = 0
+    byts = 0
+    producers = {}
+    for eqn in jaxpr.eqns:
+        for ov in eqn.outvars:
+            producers[id(ov)] = eqn
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            flops += _dot_flops(eqn)
+            byts += sum(_source_bytes(v, producers) for v in eqn.invars)
+            byts += sum(_aval_bytes(v) for v in eqn.outvars)
+            continue
+        if name == "conv_general_dilated":
+            flops += _conv_flops(eqn)
+            byts += sum(_aval_bytes(v) for v in eqn.outvars)
+            continue
+        if name == "scan":
+            inner_f, inner_b = _walk(eqn.params["jaxpr"].jaxpr)
+            L = eqn.params["length"]
+            flops += L * inner_f
+            byts += L * inner_b
+            continue
+        if name == "while":
+            bf, bb = _walk(eqn.params["body_jaxpr"].jaxpr)
+            flops += bf            # trip count unknown; counted once
+            byts += bb
+            continue
+        if name == "cond":
+            branches = eqn.params["branches"]
+            costs = [_walk(b.jaxpr) for b in branches]
+            f = max(c[0] for c in costs)
+            b = max(c[1] for c in costs)
+            flops += f
+            byts += b
+            continue
+        sub = None
+        for p in _SUBJAXPR_PARAMS:
+            if p in eqn.params:
+                sub = eqn.params[p]
+                break
+        if sub is not None:
+            inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+            f, b = _walk(inner)
+            flops += f
+            byts += b
+            continue
+        if name in ("scatter", "scatter-add", "scatter_add",
+                    "dynamic_update_slice"):
+            # in-place update: traffic = updates + indices, NOT the whole
+            # aliased output (a KV-cache slot write is ~KB, not the cache)
+            byts += sum(_aval_bytes(v) for v in eqn.invars[1:])
+            continue
+        if name not in _FUSIBLE:
+            byts += sum(_aval_bytes(v) for v in eqn.outvars)
+    return flops, byts
+
+
+def jaxpr_cost(fn, args) -> dict:
+    """GLOBAL flops / bytes of ``fn(*args)`` with scan trips multiplied.
+
+    Bytes are op-level: dot inputs+outputs, non-fusible op outputs,
+    scatter update sizes — argument arrays are counted where ops consume
+    them, so weights/caches are charged per actual touch."""
+    closed = jax.make_jaxpr(fn)(*args)
+    flops, byts = _walk(closed.jaxpr)
+    return {"flops_global": int(flops), "bytes_global": int(byts)}
+
+
+# ===================================================================== #
+# HLO while-trip-corrected collective accounting
+# ===================================================================== #
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1}
+
+
+def _parse_computations(text: str) -> dict:
+    """Split HLO text into named computation bodies.  Header lines end
+    with '{', contain '->', and start (after optional ENTRY) with the
+    %name — params may contain arbitrarily nested tuple types, so only
+    the leading token is parsed."""
+    comps: dict = {}
+    cur = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if cur is None or not line.startswith(" "):
+            if (stripped.endswith("{") and "->" in stripped
+                    and "=" not in stripped.split("(")[0]):
+                head = stripped.split("(")[0].replace("ENTRY", "").strip()
+                cur = head.lstrip("%").strip()
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def collective_trip_corrected(text: str) -> dict:
+    """Collective bytes per kind, multiplied by enclosing while-loop trip
+    counts (parsed from ``trip_count`` hints or induction bounds)."""
+    comps = _parse_computations(text)
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+
+    # trip counts: while instr lines reference condition=%c, body=%b
+    body_trips: dict = {}
+    for name, lines in comps.items():
+        for line in lines:
+            m = re.search(r"while\(.*?body=%?([\w.\-]+)", line)
+            if not m:
+                continue
+            body = m.group(1)
+            mc = re.search(r"condition=%?([\w.\-]+)", line)
+            trips = 1
+            if mc and mc.group(1) in comps:
+                for cl in comps[mc.group(1)]:
+                    mt = re.search(r"constant\((\d+)\)", cl)
+                    if mt:
+                        trips = max(trips, int(mt.group(1)))
+            body_trips[body] = trips
+
+    # computation multiplier: product of trips along call chain — build
+    # reverse edges (callee -> caller multiplier)
+    def multiplier(comp: str, seen=()) -> int:
+        if comp in seen:
+            return 1
+        mult = body_trips.get(comp, None)
+        # find callers
+        for caller, lines in comps.items():
+            for line in lines:
+                if re.search(r"(calls=|body=|condition=|to_apply=)%?"
+                             + re.escape(comp) + r"\b", line):
+                    parent = multiplier(caller, seen + (comp,))
+                    return (mult or 1) * parent
+        return mult or 1
+
+    out = {k: 0 for k in _COLL_OPS}
+    for name, lines in comps.items():
+        local = {k: 0 for k in _COLL_OPS}
+        for line in lines:
+            m = re.search(r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLL_OPS)
+                          + r")(-start)?\(", line)
+            if not m:
+                continue
+            total = 0
+            for dt, dims in shape_re.findall(m.group(1)):
+                if dt not in _DTYPE_BYTES:
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                total += n * _DTYPE_BYTES[dt]
+            local[m.group(2)] += total
+        if any(local.values()):
+            mult = multiplier(name)
+            for k in _COLL_OPS:
+                out[k] += local[k] * mult
+    out["total"] = sum(out[k] for k in _COLL_OPS)
+    return out

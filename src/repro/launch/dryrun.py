@@ -1,0 +1,450 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh with ShapeDtypeStruct inputs (no allocation), then extract
+the roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k [--mesh multi] [--strategy zero3]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Writes one JSON per combo to experiments/dryrun/.  NOTE: the XLA_FLAGS
+line above MUST precede any jax import — jax locks the device count on
+first init; smoke tests and benches run in separate processes and see 1
+device.
+"""
+import argparse
+import json
+import re
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.launch import mesh as MESH
+from repro.models import transformer as T
+from repro.models.config import INPUT_SHAPES, ModelConfig
+from repro.models.modules import ParamSpec
+from repro.serving.generate import decode_step, prefill
+from repro.sharding import strategy as S
+from repro.training import optimizer as opt
+from repro.training.steps import lm_train_step
+from repro.training.train_state import TrainState
+
+SW_LONG = 8192   # sliding window used by full-attention archs at 500k
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+# ===================================================================== #
+# Config adaptation per shape
+# ===================================================================== #
+def adapt_config(cfg: ModelConfig, shape_name: str,
+                 mesh=None, optimize: str = "") -> ModelConfig:
+    if shape_name == "long_500k" and cfg.arch_type in ("dense", "moe",
+                                                       "vlm", "audio"):
+        # sub-quadratic decode for full-attention archs: sliding window
+        cfg = cfg.replace(sliding_window=SW_LONG)
+    if mesh is not None:
+        B = INPUT_SHAPES[shape_name].global_batch
+        lead = S.batch_pspec(mesh, B, 2)[0]
+        axes = (() if lead is None
+                else (lead,) if isinstance(lead, str) else tuple(lead))
+        cfg = cfg.replace(batch_axes=axes, tp_axis="model")
+    if optimize == "kvquant" and not cfg.mla:
+        cfg = cfg.replace(kv_quant=True)
+    if optimize.startswith("wgather"):
+        cfg = cfg.replace(weight_gather=True,
+                          tp_size=mesh.shape["model"] if mesh else 16)
+    if optimize.endswith("nochunk"):
+        # at B_local=1 the full (L, V) logits fit; chunked loss otherwise
+        # re-all-reduces the lm_head gradient once PER CHUNK
+        cfg = cfg.replace(logit_chunk=0)
+    return cfg
+
+
+# ===================================================================== #
+# Input specs (ShapeDtypeStruct with shardings attached)
+# ===================================================================== #
+def _sds(shape, dtype, mesh, pspec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, pspec))
+
+
+def _param_structs(cfg, mesh, strategy, dtype=None):
+    pspecs = S.param_pspecs(cfg, mesh, strategy)
+    specs = T.param_specs(cfg)
+    dt = dtype or cfg.pdtype
+    return jax.tree_util.tree_map(
+        lambda sp, ps: _sds(sp.shape, dt, mesh, ps),
+        specs, pspecs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _opt_structs(cfg, mesh, strategy):
+    pspecs = S.pspecs_for_tree(T.param_specs(cfg), mesh, strategy, opt=True)
+    specs = T.param_specs(cfg)
+    mk = lambda sp, ps: _sds(sp.shape, jnp.float32, mesh, ps)
+    m = jax.tree_util.tree_map(mk, specs, pspecs,
+                               is_leaf=lambda x: isinstance(x, ParamSpec))
+    v = jax.tree_util.tree_map(mk, specs, pspecs,
+                               is_leaf=lambda x: isinstance(x, ParamSpec))
+    return opt.AdamState(m=m, v=v, step=_sds((), jnp.int32, mesh, P()))
+
+
+def _cache_structs(cfg, mesh, batch, max_len):
+    struct = T.cache_struct(cfg, batch, max_len)
+    pspecs = S.cache_pspecs(struct, mesh, batch)
+    return jax.tree_util.tree_map(
+        lambda s, ps: _sds(s.shape, s.dtype, mesh, ps), struct, pspecs)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
+                strategy: str = "zero3", micro: int = 8,
+                optimize: str = ""):
+    """(step_fn, example_args) for one (arch, input-shape) combo.
+
+    optimize="gather" enables the §Perf phase-amortized parameter gather
+    (one bf16 all-gather hoisted out of the microbatch scan; experts stay
+    sharded — they are too large to gather)."""
+    shape = INPUT_SHAPES[shape_name]
+    B, L = shape.global_batch, shape.seq_len
+    bp2 = S.batch_pspec(mesh, B, 2)
+    bp3 = S.batch_pspec(mesh, B, 3)
+
+    if shape.phase == "train":
+        batch = {}
+        if cfg.embed_inputs:
+            batch["tokens"] = _sds((B, L), jnp.int32, mesh, bp2)
+        else:
+            batch["embeds"] = _sds((B, L, cfg.d_model), cfg.cdtype, mesh, bp3)
+        batch["labels"] = _sds((B, L), jnp.int32, mesh, bp2)
+        batch["mask"] = _sds((B, L), jnp.float32, mesh, bp2)
+        if cfg.arch_type == "vlm":
+            batch["encoder_embeds"] = _sds((B, cfg.encoder_len,
+                                            cfg.encoder_dim), cfg.cdtype,
+                                           mesh, bp3)
+        state = TrainState(params=_param_structs(cfg, mesh, strategy),
+                           opt=_opt_structs(cfg, mesh, strategy),
+                           step=_sds((), jnp.int32, mesh, P()))
+
+        gather_pspecs = None
+        grad_pspecs = None
+        if optimize == "gradrs":
+            grad_pspecs = S.param_pspecs(cfg, mesh, strategy)
+        if optimize == "gather":
+            from repro.models.modules import ParamSpec as PS
+            z3_ps = S.param_pspecs(cfg, mesh, strategy)
+            specs = T.param_specs(cfg)
+            budget = 3 * 2 ** 30        # per-device gathered bf16 budget
+            dpset = set(S.data_axes(mesh))
+
+            def strip_data(ps):
+                """zero3 layout with the data axes removed: gather over
+                data ONCE, keep every model-axis shard in place (the
+                compute inside the scan already expects those)."""
+                entries = []
+                for e in tuple(ps):
+                    if e is None:
+                        entries.append(None)
+                        continue
+                    ax = (e,) if isinstance(e, str) else tuple(e)
+                    kept = tuple(a for a in ax if a not in dpset)
+                    entries.append(None if not kept
+                                   else kept[0] if len(kept) == 1 else kept)
+                return P(*entries)
+
+            def pick(sp, zps):
+                g = strip_data(zps)
+                shard = 1
+                for e in tuple(g):
+                    for a in ((e,) if isinstance(e, str) else (e or ())):
+                        shard *= mesh.shape[a]
+                per_dev = int(np.prod(sp.shape)) * 2 / shard
+                return zps if per_dev > budget else g
+
+            gather_pspecs = jax.tree_util.tree_map(
+                pick, specs, z3_ps,
+                is_leaf=lambda x: isinstance(x, PS))
+
+        def fn(state, batch):
+            return lm_train_step(cfg, state, batch, 1e-5, micro=micro,
+                                 gather_pspecs=gather_pspecs,
+                                 grad_pspecs=grad_pspecs)
+
+        return fn, (state, batch)
+
+    # inference phases run on bf16 weights (DeepSpeed-HE serves in
+    # half precision) under the TP (+ expert-parallel) layout
+    params = _param_structs(cfg, mesh, "tp", dtype=cfg.cdtype)
+    if shape.phase == "prefill":
+        cache = _cache_structs(cfg, mesh, B, L)
+        args = {}
+        if cfg.embed_inputs:
+            args["tokens"] = _sds((B, L), jnp.int32, mesh, bp2)
+        else:
+            args["embeds"] = _sds((B, L, cfg.d_model), cfg.cdtype, mesh, bp3)
+        if cfg.arch_type == "vlm":
+            args["encoder_embeds"] = _sds((B, cfg.encoder_len,
+                                           cfg.encoder_dim), cfg.cdtype,
+                                          mesh, bp3)
+
+        def fn(params, cache, args):
+            return prefill(cfg, params, args.get("tokens"), cache,
+                           embeds=args.get("embeds"),
+                           encoder_embeds=args.get("encoder_embeds"))
+
+        return fn, (params, cache, args)
+
+    # decode: ONE new token against a seq_len cache
+    cache = _cache_structs(cfg, mesh, B, L)
+    bp1 = P(bp2[0])
+    args = {"position": _sds((B,), jnp.int32, mesh, bp1)}
+    if cfg.embed_inputs:
+        args["token"] = _sds((B,), jnp.int32, mesh, bp1)
+    else:
+        args["embeds"] = _sds((B, 1, cfg.d_model), cfg.cdtype, mesh, bp3)
+
+    def fn(params, cache, args):
+        logits, cache = decode_step(cfg, params, args.get("token"), cache,
+                                    args["position"],
+                                    embeds=args.get("embeds"))
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    return fn, (params, cache, args)
+
+
+# ===================================================================== #
+# HLO collective accounting
+# ===================================================================== #
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-tensor bytes of every collective op in the (per-device)
+    compiled HLO."""
+    out = {k: 0 for k in _COLL_OPS}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLL_OPS)
+                      + r")(-start)?\(", line)
+        if not m:
+            continue
+        op = m.group(2)
+        lhs = m.group(1)
+        total = 0
+        for dt, dims in shape_re.findall(lhs):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[op] += total
+    out["total"] = sum(out[k] for k in _COLL_OPS)
+    return out
+
+
+# ===================================================================== #
+# Roofline terms
+# ===================================================================== #
+def active_param_count(cfg: ModelConfig):
+    """(N_total, N_active), excluding vocab-axis params (6ND convention)."""
+    specs = T.param_specs(cfg)
+    tot = act = 0
+    for leaf in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, ParamSpec)):
+        n = int(np.prod(leaf.shape))
+        if "vocab" in leaf.axes:
+            continue
+        tot += n
+        if "experts" in leaf.axes:
+            act += n * cfg.top_k / max(cfg.n_experts, 1)
+        else:
+            act += n
+    return tot, int(act)
+
+
+def roofline(cfg: ModelConfig, shape_name: str, compiled, n_chips: int,
+             jcost: dict):
+    """Three-term roofline.
+
+    compute/memory come from the trip-count-aware jaxpr walker (GLOBAL,
+    so /n_chips) — ``compiled.cost_analysis()`` counts every scan body
+    once and under-reports by the trip count, so it is recorded only as
+    ``per_iteration_*`` reference.  collective bytes come from the
+    partitioned HLO with while-trip correction (already per-device).
+    """
+    shape = INPUT_SHAPES[shape_name]
+    from repro.launch.cost_walker import collective_trip_corrected
+    ca = compiled.cost_analysis()
+    coll = collective_trip_corrected(compiled.as_text())
+    ma = compiled.memory_analysis()
+
+    flops_dev = jcost["flops_global"] / n_chips
+    bytes_dev = jcost["bytes_global"] / n_chips
+    compute_s = flops_dev / MESH.PEAK_FLOPS
+    memory_s = bytes_dev / MESH.HBM_BW
+    collective_s = coll["total"] / MESH.ICI_BW
+
+    n_tot, n_act = active_param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.phase in ("train", "prefill")
+                                   else 1)
+    mult = 6 if shape.phase == "train" else 2
+    model_flops = mult * n_act * tokens
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    return {
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll,
+        "per_iteration_flops_hlo": float(ca.get("flops", 0.0)),
+        "per_iteration_bytes_hlo": float(ca.get("bytes accessed", 0.0)),
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_global": model_flops,
+        "model_flops_per_device": model_flops / n_chips,
+        "useful_flop_ratio": (model_flops / n_chips) / max(flops_dev, 1.0),
+        "n_params_nonvocab": n_tot,
+        "n_params_active": n_act,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_est_bytes": (ma.argument_size_in_bytes
+                               + ma.output_size_in_bytes
+                               + ma.temp_size_in_bytes
+                               - ma.alias_size_in_bytes),
+            "hbm_bytes": MESH.HBM_BYTES,
+        },
+    }
+
+
+# ===================================================================== #
+# Runner
+# ===================================================================== #
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            strategy: str = "zero3", out_dir: str = "experiments/dryrun",
+            verbose: bool = True, save_hlo: bool = False,
+            tag: str = "", micro: int = 8, optimize: str = "",
+            mesh_shape=None) -> dict:
+    if mesh_shape is not None:
+        # §Perf logical re-mesh, e.g. (64, 4) on one pod or (2, 256, 1)
+        # across pods: less tensor parallelism => fewer activation
+        # all-reduce bytes per device (tokens spread over wider data axes)
+        axes = (("data", "model") if len(mesh_shape) == 2
+                else ("pod", "data", "model"))
+        mesh = jax.make_mesh(tuple(mesh_shape), axes,
+                             axis_types=MESH._auto(len(axes)))
+    else:
+        mesh = MESH.make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    cfg = adapt_config(get_config(arch), shape_name, mesh,
+                       optimize=optimize)
+    fn, args = input_specs(cfg, shape_name, mesh, strategy=strategy,
+                           micro=micro, optimize=optimize)
+
+    shape = INPUT_SHAPES[shape_name]
+    # serving phases donate the KV cache (out aliases arg, as a real
+    # serving loop would); training donates the TrainState
+    donate = (0,) if shape.phase == "train" else (1,)
+    t0 = time.perf_counter()
+    with mesh:
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    from repro.launch.cost_walker import jaxpr_cost
+    with mesh:
+        jcost = jaxpr_cost(fn, args)
+
+    mesh_name = ("x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+                 if mesh_shape is not None
+                 else ("2x16x16" if multi_pod else "16x16"))
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": mesh_name,
+        "n_chips": n_chips, "strategy": strategy,
+        "sliding_window": cfg.sliding_window,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        **roofline(cfg, shape_name, compiled, n_chips, jcost),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = ("__" + tag) if tag else ""
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__"
+                        f"{rec['mesh']}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    if save_hlo:
+        with open(path.replace(".json", ".hlo.txt"), "w") as f:
+            f.write(compiled.as_text())
+    if verbose:
+        mem = rec["memory"]["peak_est_bytes"] / 2 ** 30
+        print(f"[OK] {arch:24s} {shape_name:12s} {rec['mesh']:8s} "
+              f"lower={t_lower:6.1f}s compile={t_compile:6.1f}s "
+              f"mem/dev={mem:6.2f}GiB dominant={rec['dominant']} "
+              f"(C={rec['compute_s']:.3e} M={rec['memory_s']:.3e} "
+              f"X={rec['collective_s']:.3e})", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--strategy", default="zero3",
+                    choices=list(S.STRATEGIES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--micro", type=int, default=8)
+    ap.add_argument("--opt", default="",
+                    choices=["", "gather", "kvquant", "gradrs",
+                             "wgather", "wgather_nochunk"])
+    ap.add_argument("--mesh-shape", default=None,
+                    help="logical single-pod re-mesh, e.g. 64x4")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in list_archs():
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in combos:
+        try:
+            ms = (tuple(int(x) for x in args.mesh_shape.split("x"))
+                  if args.mesh_shape else None)
+            run_one(a, s, multi_pod=(args.mesh == "multi"),
+                    strategy=args.strategy, out_dir=args.out_dir,
+                    save_hlo=args.save_hlo, tag=args.tag,
+                    micro=args.micro, optimize=args.opt, mesh_shape=ms)
+        except Exception as e:  # noqa: BLE001 — report all failures at end
+            failures.append((a, s, repr(e)[:500]))
+            print(f"[FAIL] {a} {s}: {e!r}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

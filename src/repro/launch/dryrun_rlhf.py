@@ -1,0 +1,143 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Stage-3 RLHF dry-run — the paper's ACTUAL workload on the production
+mesh: one PPO iteration's training half (actor clipped-surrogate update +
+critic value update from a scored experience batch) for an OPT-family
+actor + 350M reward/critic, lowered + compiled with ShapeDtypeStructs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_rlhf --actor opt-13b \
+        [--chips 256] [--micro 8]
+
+The experience-generation half is covered by the decode/prefill dry-runs
+(that is the point of the Hybrid Engine: generation runs as serving);
+this proves the four-model TRAINING residency + collective story: actor
+(train layout) + ref (frozen) + critic (train) + reward (frozen) on the
+same mesh, per the paper's memory-cost analysis of stage 3.
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import experience as X
+from repro.core.ppo import PPOConfig, actor_step, critic_step
+from repro.launch import mesh as MESH
+from repro.launch.dryrun import _opt_structs, _param_structs, _sds
+from repro.launch.cost_walker import jaxpr_cost
+from repro.models.config import INPUT_SHAPES
+from repro.sharding import strategy as S
+from repro.training.train_state import TrainState
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--actor", default="opt-13b")
+    ap.add_argument("--reward", default="opt-350m")
+    ap.add_argument("--batch", type=int, default=256)   # one PPO
+    # minibatch; the paper's 1024-pair global batch is consumed in 4
+    # sequential PPO minibatches (DS-Chat per-device train batching)
+    ap.add_argument("--seq", type=int, default=512)     # 256 + 256
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    mesh = MESH.make_production_mesh()
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    actor_cfg = get_config(args.actor).replace(
+        batch_axes=("data",), tp_axis="model", logit_chunk=512)
+    critic_cfg = get_config(args.reward).replace(
+        batch_axes=("data",), tp_axis="model")
+    ppo = PPOConfig()
+
+    B, T = args.batch, args.seq
+    bp2 = S.batch_pspec(mesh, B, 2)
+    f32 = jnp.float32
+    exp = X.Experience(
+        sequences=_sds((B, T), jnp.int32, mesh, bp2),
+        logprobs=_sds((B, T - 1), f32, mesh, bp2),
+        ref_logprobs=_sds((B, T - 1), f32, mesh, bp2),
+        values=_sds((B, T - 1), f32, mesh, bp2),
+        rewards=_sds((B, T - 1), f32, mesh, bp2),
+        advantages=_sds((B, T - 1), f32, mesh, bp2),
+        returns=_sds((B, T - 1), f32, mesh, bp2),
+        mask=_sds((B, T - 1), f32, mesh, bp2),
+    )
+    actor_state = TrainState(
+        params=_param_structs(actor_cfg, mesh, "zero3"),
+        opt=_opt_structs(actor_cfg, mesh, "zero3"),
+        step=_sds((), jnp.int32, mesh, P()))
+
+    # critic = reward-model structure (transformer backbone + v_head)
+    from repro.models import reward as R
+    from repro.models.modules import ParamSpec
+
+    def _reward_structs(cfg, dtype):
+        specs = R.param_specs(cfg)
+        pspecs = S.pspecs_for_tree(specs, mesh, "zero3")
+        return jax.tree_util.tree_map(
+            lambda sp, ps: _sds(sp.shape, dtype, mesh, ps), specs, pspecs,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    cparams = _reward_structs(critic_cfg, critic_cfg.pdtype)
+    copt_m = _reward_structs(critic_cfg, jnp.float32)
+    copt_v = _reward_structs(critic_cfg, jnp.float32)
+    from repro.training import optimizer as opt
+    critic_state = TrainState(
+        params=cparams,
+        opt=opt.AdamState(m=copt_m, v=copt_v,
+                          step=_sds((), jnp.int32, mesh, P())),
+        step=_sds((), jnp.int32, mesh, P()))
+
+    def rlhf_train(astate, cstate, exp):
+        astate, am = actor_step(actor_cfg, ppo, astate, exp, None)
+        cstate, cm = critic_step(critic_cfg, ppo, cstate, exp)
+        return astate, cstate, am["approx_kl"], cm["v_loss"]
+
+    t0 = time.perf_counter()
+    with mesh:
+        lowered = jax.jit(rlhf_train, donate_argnums=(0, 1)).lower(
+            actor_state, critic_state, exp)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    with mesh:
+        jcost = jaxpr_cost(rlhf_train, (actor_state, critic_state, exp))
+
+    ma = compiled.memory_analysis()
+    from repro.launch.cost_walker import collective_trip_corrected
+    coll = collective_trip_corrected(compiled.as_text())
+    mem = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+           + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    rec = {
+        "workload": "rlhf_stage3_train_half",
+        "actor": args.actor, "reward": args.reward,
+        "batch": B, "seq": T, "mesh": "16x16", "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": jcost["flops_global"] / n_chips,
+        "bytes_per_device": jcost["bytes_global"] / n_chips,
+        "collective_bytes_per_device": coll,
+        "compute_s": jcost["flops_global"] / n_chips / MESH.PEAK_FLOPS,
+        "memory_s": jcost["bytes_global"] / n_chips / MESH.HBM_BW,
+        "collective_s": coll["total"] / MESH.ICI_BW,
+        "mem_per_chip_gib": mem / 2 ** 30,
+    }
+    os.makedirs(args.out_dir, exist_ok=True)
+    path = os.path.join(args.out_dir,
+                        f"rlhf_stage3__{args.actor}__16x16.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"[OK] rlhf stage-3 train half: actor={args.actor} "
+          f"reward={args.reward} lower={t_lower:.1f}s "
+          f"compile={t_compile:.1f}s mem/dev={mem/2**30:.2f}GiB "
+          f"C={rec['compute_s']:.3e} M={rec['memory_s']:.3e} "
+          f"X={rec['collective_s']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run process
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax import and only then builds the mesh.
+
+Target hardware: TPU v5e — 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link
+ICI, 16 GiB HBM per chip.  Single pod = 16x16 = 256 chips; multi-pod =
+2 pods = 512 chips with a leading "pod" axis (DCN-ish slower links).
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants used by the roofline analysis
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+HBM_BYTES = 16 * 2 ** 30     # per chip
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_local_mesh(model: int = 1):
+    """Mesh over whatever devices exist (CPU tests: 1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=_auto(2))

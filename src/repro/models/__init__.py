@@ -1,0 +1,6 @@
+from repro.models.config import (ATTN, CROSS, SSM, INPUT_SHAPES, InputShape,
+                                 LayerSpec, ModelConfig, Segment)
+from repro.models import modules, transformer, reward
+
+__all__ = ["ATTN", "CROSS", "SSM", "INPUT_SHAPES", "InputShape", "LayerSpec",
+           "ModelConfig", "Segment", "modules", "transformer", "reward"]

@@ -1,0 +1,907 @@
+"""Model primitives: norms, RoPE, attention (GQA / qk-norm / sliding-window /
+MLA / cross), SwiGLU MLP, MoE with capacity-based scatter dispatch, and the
+Mamba2 SSD mixer (chunked scan for train/prefill, O(1) recurrence for decode).
+
+Everything is functional: ``params`` are nested dicts of arrays; the
+structure (shapes + logical sharding axes) comes from ``ParamSpec`` trees so
+the sharding layer has a single source of truth.
+
+Attention is implemented flash-style (block-wise online softmax via
+``lax.scan`` over KV blocks) in pure jnp — the full L×L score matrix is
+never materialized, which is what lets the 32k-prefill and 4k×256-batch
+training graphs compile within per-chip memory on the production mesh.  On
+TPU (``cfg.use_pallas``) the same math dispatches to the Pallas kernels in
+``repro.kernels``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def constrain_batch(x, batch_axes):
+    """Pin the leading (batch) axis of an activation to the data mesh axes.
+    Without this, GSPMD propagation can replicate the batch (it prefers the
+    embed-table sharding through the gather) and per-device activation
+    memory blows up by the data-parallel factor."""
+    if not batch_axes or x is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    lead = batch_axes[0] if len(batch_axes) == 1 else tuple(batch_axes)
+    return jax.lax.with_sharding_constraint(
+        x, P(lead, *([None] * (x.ndim - 1))))
+
+
+_TP_LOGICAL = {"heads", "kv_heads", "mlp", "experts", "vocab"}
+
+
+def wgather(w, cfg, axes):
+    """§Perf weight-gather-at-use: constrain a weight to its ZeRO layout
+    with the data axes stripped (model/TP shards kept).  XLA then
+    all-gathers the WEIGHT once per use instead of partial-summing the
+    matmul and all-reducing the (much larger) activation — the dominant
+    training collective otherwise.  ``axes`` are the weight's logical
+    axes (layer-sliced, no leading "layers")."""
+    if not (cfg.weight_gather and cfg.batch_axes and cfg.tp_axis):
+        return w
+    from jax.sharding import PartitionSpec as P
+    entries = []
+    used = False
+    for dim, a in zip(w.shape, axes):
+        if a in _TP_LOGICAL and not used and dim % cfg.tp_size == 0:
+            entries.append(cfg.tp_axis)
+            used = True
+        else:
+            entries.append(None)
+    # barrier pins the f32->bf16 convert BEFORE the gather so the
+    # collective moves half the bytes (XLA otherwise reorders to
+    # gather-f32-then-convert)
+    w = jax.lax.optimization_barrier(w.astype(cfg.cdtype))
+    return jax.lax.with_sharding_constraint(w, P(*entries))
+
+
+def constrain_axis(x, cfg, axis: int, dim_divisor: int = 16):
+    """Additionally shard activation axis ``axis`` over the TP mesh axis
+    (used for SSD heads — the (b,c,h,q,q) intra-chunk decay tensors are the
+    memory peak of Mamba2 training and shard cleanly over heads)."""
+    if not cfg.tp_axis or x is None or x.shape[axis] % dim_divisor:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = [None] * x.ndim
+    if cfg.batch_axes:
+        spec[0] = (cfg.batch_axes[0] if len(cfg.batch_axes) == 1
+                   else tuple(cfg.batch_axes))
+    spec[axis] = cfg.tp_axis
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ===================================================================== #
+# Param specs
+# ===================================================================== #
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple              # logical axis names, None = never sharded
+    init: str = "normal"     # normal | zeros | ones
+    scale: float = 1.0       # multiplier on 1/sqrt(fan_in)
+
+
+def materialize(spec: ParamSpec, key, dtype) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    start = 1 if (spec.axes and spec.axes[0] == "layers") else 0
+    shp = spec.shape[start:]
+    fan_in = shp[0] if len(shp) == 1 else int(np.prod(shp[:-1]))
+    std = spec.scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape) * std).astype(dtype)
+
+
+def init_tree(specs, key, dtype):
+    """Materialize a pytree of ParamSpec into arrays (split keys by path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [materialize(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+# ===================================================================== #
+# Norms
+# ===================================================================== #
+def rmsnorm(x, weight, eps: float = 1e-5, use_pallas: bool = False):
+    if use_pallas and x.ndim >= 2:
+        from repro.kernels import ops as kops
+        return kops.rmsnorm(x, weight, eps=eps)
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+def rmsnorm_gated(x, z, weight, eps: float = 1e-5):
+    """Mamba2-style gated RMSNorm: norm(x * silu(z))."""
+    return rmsnorm(x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                   weight, eps)
+
+
+# ===================================================================== #
+# RoPE
+# ===================================================================== #
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., L, H, D) or (..., L, D); positions: (..., L)."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * inv        # (..., L, d/2)
+    if x.ndim == ang.ndim + 1:                                   # heads axis
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., ::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ===================================================================== #
+# Flash attention (pure jnp, block-wise online softmax, custom VJP)
+#
+# The backward pass recomputes attention probabilities block-by-block
+# (FlashAttention-2 style) instead of letting scan-AD stash every (q,k)
+# tile -- without this, a 4k x 4k training graph materializes hundreds of
+# GiB of per-block residuals.  This function doubles as the numerical
+# oracle for the Pallas TPU kernel in repro/kernels.
+# ===================================================================== #
+def _tile_mask(qpos, kpos, Lk, causal, window):
+    mask = (kpos < Lk)[None, :]
+    if causal:
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    if window is not None:
+        mask = mask & ((qpos[:, None] - kpos[None, :]) < window)
+    return mask                                    # (q_block, k_block)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_block=512,
+                    k_block=1024, qpos0=0):
+    """Memory-efficient attention.
+
+    q: (B, Lq, H, D); k, v: (B, Lk, KV, D) with H = KV * G.
+    Never materializes (Lq, Lk); scans KV blocks with online softmax.
+    ``qpos0`` offsets query positions (prefill continuation); ``window``
+    applies sliding-window masking.
+    """
+    Lq, Lk = q.shape[1], k.shape[1]
+    meta = (bool(causal), window, int(min(q_block, Lq)),
+            int(min(k_block, Lk)), int(qpos0))
+    return _flash(meta, q, k, v)
+
+
+def _blockify(x, blk):
+    """(B, L, ...) -> ((B, n, blk, ...), n) with zero padding."""
+    B, L = x.shape[0], x.shape[1]
+    rest = x.shape[2:]
+    n = -(-L // blk)
+    xp = jnp.pad(x, ((0, 0), (0, n * blk - L)) + ((0, 0),) * len(rest))
+    return xp.reshape((B, n, blk) + rest), n
+
+
+def _flash_fwd_impl(meta, q, k, v):
+    causal, window, q_block, k_block, qpos0 = meta
+    B, Lq, H, D = q.shape
+    Lk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(D)
+    q5 = q.reshape(B, Lq, KV, G, D)
+    qp, nq = _blockify(q5, q_block)               # (B,nq,qb,KV,G,D)
+    kp, nk = _blockify(k, k_block)                # (B,nk,kb,KV,D)
+    vp, _ = _blockify(v, k_block)
+
+    ks = jnp.moveaxis(kp, 1, 0)                   # (nk,B,kb,KV,D)
+    vs = jnp.moveaxis(vp, 1, 0)
+
+    def q_block_fn(xs):
+        qb, iq = xs
+        qpos = qpos0 + iq * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, xs2):
+            m, l, acc = carry
+            kb, vb, ik = xs2
+            kpos = ik * k_block + jnp.arange(k_block)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _tile_mask(qpos, kpos, Lk, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_block, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-20)
+        lse = m + jnp.log(jnp.maximum(l, 1e-20))   # (B,KV,G,qb)
+        return out, lse
+
+    qb_stack = jnp.moveaxis(qp, 1, 0)              # (nq,B,qb,KV,G,D)
+    outs, lses = jax.lax.map(q_block_fn, (qb_stack, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 3)                 # (B,KV,G,nq,qb,D)
+    out = out.reshape(B, KV, G, nq * q_block, D)[:, :, :, :Lq]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Lq, H, D).astype(q.dtype)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, KV, G, nq * q_block)[..., :Lq]
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(meta, q, k, v):
+    return _flash_fwd_impl(meta, q, k, v)[0]
+
+
+def _flash_fwd(meta, q, k, v):
+    out, lse = _flash_fwd_impl(meta, q, k, v)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(meta, res, g):
+    causal, window, q_block, k_block, qpos0 = meta
+    q, k, v, out, lse = res
+    B, Lq, H, D = q.shape
+    Lk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(D)
+
+    q5 = q.reshape(B, Lq, KV, G, D)
+    g5 = g.reshape(B, Lq, KV, G, D)
+    o5 = out.reshape(B, Lq, KV, G, D)
+    delta = jnp.sum(g5.astype(jnp.float32) * o5.astype(jnp.float32),
+                    axis=-1)                               # (B,Lq,KV,G)
+    delta = jnp.moveaxis(jnp.moveaxis(delta, 1, 3), 1, 1)  # (B,KV,G,Lq)
+
+    qp, nq = _blockify(q5, q_block)
+    gp, _ = _blockify(g5, q_block)
+    kp, nk = _blockify(k, k_block)
+    vp, _ = _blockify(v, k_block)
+    Skp = nk * k_block
+    kp_flat = kp.reshape(B, Skp, KV, D)
+    vp_flat = vp.reshape(B, Skp, KV, D)
+    pad_q = nq * q_block - Lq
+    lse_p = jnp.pad(lse, ((0, 0),) * 3 + ((0, pad_q),),
+                    constant_values=NEG_INF)
+    lse_b = lse_p.reshape(B, KV, G, nq, q_block)
+    delta_p = jnp.pad(delta, ((0, 0),) * 3 + ((0, pad_q),))
+    delta_b = delta_p.reshape(B, KV, G, nq, q_block)
+
+    def q_step(carry, xs):
+        dk, dv = carry                                     # (B,Skp,KV,D) f32
+        qb, gb, lse_q, delta_q, iq = xs
+        qpos = qpos0 + iq * q_block + jnp.arange(q_block)
+        lse_safe = jnp.where(lse_q <= NEG_INF / 2, 0.0, lse_q)
+
+        def kv_step(inner, ik):
+            dk, dv, dq = inner
+            k0 = ik * k_block
+            kb = jax.lax.dynamic_slice_in_dim(kp_flat, k0, k_block, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vp_flat, k0, k_block, 1)
+            kpos = k0 + jnp.arange(k_block)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _tile_mask(qpos, kpos, Lk, causal, window)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lse_safe[..., None]), 0.0)
+            gb32 = gb.astype(jnp.float32)
+            dv_blk = jnp.einsum("bkgqs,bqkgd->bskd", p, gb32)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", gb32,
+                            vb.astype(jnp.float32))
+            ds = p * (dp - delta_q[..., None]) * scale
+            dq = dq + jnp.einsum("bkgqs,bskd->bqkgd", ds,
+                                 kb.astype(jnp.float32))
+            dk_blk = jnp.einsum("bkgqs,bqkgd->bskd", ds,
+                                qb.astype(jnp.float32))
+            dk = jax.lax.dynamic_update_slice_in_dim(
+                dk, jax.lax.dynamic_slice_in_dim(dk, k0, k_block, 1)
+                + dk_blk, k0, 1)
+            dv = jax.lax.dynamic_update_slice_in_dim(
+                dv, jax.lax.dynamic_slice_in_dim(dv, k0, k_block, 1)
+                + dv_blk, k0, 1)
+            return (dk, dv, dq), None
+
+        dq0 = jnp.zeros((B, q_block, KV, G, D), jnp.float32)
+        (dk, dv, dq), _ = jax.lax.scan(kv_step, (dk, dv, dq0),
+                                       jnp.arange(nk))
+        return (dk, dv), dq
+
+    dk0 = jnp.zeros((B, Skp, KV, D), jnp.float32)
+    dv0 = jnp.zeros((B, Skp, KV, D), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(
+        q_step, (dk0, dv0),
+        (jnp.moveaxis(qp, 1, 0), jnp.moveaxis(gp, 1, 0),
+         jnp.moveaxis(lse_b, 3, 0), jnp.moveaxis(delta_b, 3, 0),
+         jnp.arange(nq)))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, nq * q_block, KV, G, D)[:, :Lq]
+    dq = dq.reshape(B, Lq, H, D).astype(q.dtype)
+    dk = dk[:, :Lk].astype(k.dtype)
+    dv = dv[:, :Lk].astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask, use_pallas=False):
+    """Single-token attention over a (possibly ring-buffer) KV cache.
+
+    q: (B, H, D); k_cache/v_cache: (B, S, KV, D); valid_mask: (B, S) bool.
+    Returns (B, H, D).  RoPE is pre-applied to cached keys, so slot order
+    inside the ring buffer is irrelevant (softmax is order-invariant).
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.decode_attention(q, k_cache, v_cache, valid_mask)
+    B, H, D = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    # barrier: stops XLA hoisting a convert(f32) of the FULL stacked
+    # per-layer cache out of the layer scan (a cache-sized f32 temp)
+    k_cache = jax.lax.optimization_barrier(k_cache)
+    v_cache = jax.lax.optimization_barrier(v_cache)
+    qs = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qs, k_cache,
+                   preferred_element_type=jnp.float32) / np.sqrt(D)
+    s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+# ===================================================================== #
+# GQA attention layer (qk-norm, sliding window, ring-buffer cache)
+# ===================================================================== #
+def attn_specs(cfg: ModelConfig) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": ParamSpec((D, H * hd), ("embed", "heads")),
+        "wk": ParamSpec((D, KV * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((D, KV * hd), ("embed", "kv_heads")),
+        "wo": ParamSpec((H * hd, D), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), (None,), "ones")
+        s["k_norm"] = ParamSpec((hd,), (None,), "ones")
+    return s
+
+
+def attn_cache_shape(cfg: ModelConfig, batch: int, max_len: int,
+                     window: Optional[int]):
+    S = max_len if window is None else min(window, max_len)
+    out = dict(k=(batch, S, cfg.n_kv_heads, cfg.head_dim),
+               v=(batch, S, cfg.n_kv_heads, cfg.head_dim))
+    if cfg.kv_quant:
+        out["k_scale"] = (batch, S, cfg.n_kv_heads)
+        out["v_scale"] = (batch, S, cfg.n_kv_heads)
+    return out
+
+
+def _kv_quant(x):
+    """absmax int8 quantization over the head dim.
+    x: (..., hd) -> (int8 (..., hd), f32 scale (...,))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    xi = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                  -127, 127).astype(jnp.int8)
+    return xi, scale.astype(jnp.float32)
+
+
+def decode_attention_quant(q, k_i8, v_i8, k_scale, v_scale, valid_mask):
+    """Flash-decode over an int8 KV cache: the dots consume int8 operands
+    (XLA fuses the widening convert, so HBM traffic is the int8 bytes);
+    per-slot scales are applied to the score/probability matrices, never
+    to the cache-sized tensors.
+
+    q: (B, H, D); k_i8/v_i8: (B, S, KV, D) int8; scales: (B, S, KV)."""
+    B, H, D = q.shape
+    KV = k_i8.shape[2]
+    G = H // KV
+    k_i8 = jax.lax.optimization_barrier(k_i8)
+    v_i8 = jax.lax.optimization_barrier(v_i8)
+    qs = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qs.astype(jnp.float32),
+                   k_i8.astype(jnp.float32)) / np.sqrt(D)
+    s = s * jnp.moveaxis(k_scale, 1, 2)[:, :, None, :]     # (B,KV,1,S)
+    s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    pv = p * jnp.moveaxis(v_scale, 1, 2)[:, :, None, :]
+    o = jnp.einsum("bkgs,bskd->bkgd", pv, v_i8.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def attn_apply(cfg: ModelConfig, p, x, *, positions, mode, cache=None,
+               window=None):
+    """mode: 'full' (train / full prefill) | 'prefill' (also fills cache) |
+    'decode' (x is (B,1,D), cache holds history)."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ wgather(p["wq"], cfg, ("embed", "heads"))).reshape(B, -1, H, hd)
+    k = (x @ wgather(p["wk"], cfg, ("embed", "kv_heads"))).reshape(
+        B, -1, KV, hd)
+    v = (x @ wgather(p["wv"], cfg, ("embed", "kv_heads"))).reshape(
+        B, -1, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.rms_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.rms_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None
+        S = cache["k"].shape[1]
+        pos = positions[:, 0]                       # (B,)
+        slot = pos % S                              # ring-buffer slot
+        ck = jax.lax.optimization_barrier(cache["k"])
+        cv = jax.lax.optimization_barrier(cache["v"])
+        if cfg.kv_quant:
+            ki, ks = _kv_quant(k[:, 0])             # (B,KV,hd),(B,KV)
+            vi, vs = _kv_quant(v[:, 0])
+            upd = lambda c, i, u: jax.vmap(
+                lambda cc, ii, uu: cc.at[ii].set(uu))(c, i, u)
+            k_cache = upd(ck, slot, ki)
+            v_cache = upd(cv, slot, vi)
+            ks_cache = upd(cache["k_scale"], slot, ks)
+            vs_cache = upd(cache["v_scale"], slot, vs)
+            n_valid = jnp.minimum(pos + 1, S)
+            valid = jnp.arange(S)[None, :] < n_valid[:, None]
+            o = decode_attention_quant(q[:, 0], k_cache, v_cache,
+                                       ks_cache, vs_cache, valid)
+            new_cache = dict(k=k_cache, v=v_cache, k_scale=ks_cache,
+                             v_scale=vs_cache)
+        else:
+            k_cache = jax.vmap(lambda c, i, u: c.at[i].set(u))(
+                ck, slot, k[:, 0])
+            v_cache = jax.vmap(lambda c, i, u: c.at[i].set(u))(
+                cv, slot, v[:, 0])
+            n_valid = jnp.minimum(pos + 1, S)
+            valid = jnp.arange(S)[None, :] < n_valid[:, None]
+            o = decode_attention(q[:, 0], k_cache, v_cache, valid,
+                                 use_pallas=cfg.use_pallas)
+            new_cache = dict(k=k_cache, v=v_cache)
+        o = o[:, None]                              # (B,1,H,hd)
+    else:
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops
+            o = kops.flash_attention(q, k, v, causal=True, window=window)
+        else:
+            o = flash_attention(q, k, v, causal=True, window=window)
+        if mode == "prefill":
+            assert cache is not None
+            S = cache["k"].shape[1]
+            L = k.shape[1]
+            kq, vq, ksq, vsq = k, v, None, None
+            if cfg.kv_quant:
+                kq, ksq = _kv_quant(k)
+                vq, vsq = _kv_quant(v)
+            if L <= S:
+                k_cache = cache["k"].at[:, :L].set(kq)
+                v_cache = cache["v"].at[:, :L].set(vq)
+            else:                                   # keep last S (window)
+                # ring layout: entry for pos t lives at slot t % S
+                t0 = L - S
+                roll = (-t0) % S
+                k_cache = jnp.roll(kq[:, -S:], shift=-roll, axis=1)
+                v_cache = jnp.roll(vq[:, -S:], shift=-roll, axis=1)
+            new_cache = dict(k=k_cache, v=v_cache)
+            if cfg.kv_quant:
+                if L <= S:
+                    new_cache["k_scale"] = cache["k_scale"].at[:, :L].set(
+                        ksq)
+                    new_cache["v_scale"] = cache["v_scale"].at[:, :L].set(
+                        vsq)
+                else:
+                    roll = (-(L - S)) % S
+                    new_cache["k_scale"] = jnp.roll(ksq[:, -S:], -roll, 1)
+                    new_cache["v_scale"] = jnp.roll(vsq[:, -S:], -roll, 1)
+    out = o.reshape(B, -1, H * hd) @ wgather(p["wo"], cfg,
+                                            ("heads", "embed"))
+    return out, new_cache
+
+
+# ===================================================================== #
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ===================================================================== #
+def mla_specs(cfg: ModelConfig) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_head_dim,
+                     cfg.qk_rope_head_dim, cfg.v_head_dim)
+    return {
+        "wq": ParamSpec((D, H * (dn + dr)), ("embed", "heads")),
+        "w_dkv": ParamSpec((D, r + dr), ("embed", None)),
+        "kv_norm": ParamSpec((r,), (None,), "ones"),
+        "w_uk": ParamSpec((r, H * dn), (None, "heads")),
+        "w_uv": ParamSpec((r, H * dv), (None, "heads")),
+        "wo": ParamSpec((H * dv, D), ("heads", "embed")),
+    }
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    return dict(ckv=(batch, max_len, cfg.kv_lora_rank),
+                krope=(batch, max_len, cfg.qk_rope_head_dim))
+
+
+def _mla_qkv(cfg, p, x, positions):
+    B, L, _ = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = (x @ wgather(p["wq"], cfg, ("embed", "heads"))).reshape(
+        B, L, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    dkv = x @ wgather(p["w_dkv"], cfg, ("embed", None))   # (B,L,r+dr)
+    ckv = rmsnorm(dkv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.rms_eps)
+    krope = apply_rope(dkv[..., cfg.kv_lora_rank:], positions, cfg.rope_theta)
+    return q_nope, q_rope, ckv, krope
+
+
+def mla_apply(cfg: ModelConfig, p, x, *, positions, mode, cache=None,
+              window=None):
+    """MLA.  Prefill/train: expand compressed KV and run flash attention.
+    Decode: *absorbed* form — scores and values computed directly against
+    the compressed cache (W_UK folded into q, W_UV applied after), so the
+    per-token cost is O(L·(r+dr)) instead of O(L·H·(dn+dr))."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_head_dim,
+                     cfg.qk_rope_head_dim, cfg.v_head_dim)
+    q_nope, q_rope, ckv, krope = _mla_qkv(cfg, p, x, positions)
+    scale = 1.0 / np.sqrt(dn + dr)
+    new_cache = None
+
+    if mode == "decode":
+        assert cache is not None
+        S = cache["ckv"].shape[1]
+        pos = positions[:, 0]
+        ckv_c = jax.vmap(lambda c, i, u: c.at[i].set(u))(
+            cache["ckv"], pos % S, ckv[:, 0])
+        krope_c = jax.vmap(lambda c, i, u: c.at[i].set(u))(
+            cache["krope"], pos % S, krope[:, 0])
+        valid = jnp.arange(S)[None] < jnp.minimum(pos + 1, S)[:, None]
+        # absorbed scores
+        w_uk = p["w_uk"].reshape(r, H, dn)
+        q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)     # (B,H,r)
+        s = (jnp.einsum("bhr,bsr->bhs", q_eff, ckv_c,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], krope_c,
+                          preferred_element_type=jnp.float32)) * scale
+        s = jnp.where(valid[:, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhs,bsr->bhr", pr.astype(ckv_c.dtype), ckv_c,
+                         preferred_element_type=jnp.float32)       # (B,H,r)
+        w_uv = p["w_uv"].reshape(r, H, dv)
+        o = jnp.einsum("bhr,rhd->bhd", ctx.astype(x.dtype), w_uv)
+        o = o[:, None]                                             # (B,1,H,dv)
+        new_cache = dict(ckv=ckv_c, krope=krope_c)
+    else:
+        L = x.shape[1]
+        k_nope = (ckv @ p["w_uk"]).reshape(B, L, H, dn)
+        vfull = (ckv @ p["w_uv"]).reshape(B, L, H, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None], (B, L, H, dr))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        # pad V to qk head dim so flash kernel sees uniform D, slice after
+        dq = dn + dr
+        vpad = jnp.pad(vfull, ((0, 0), (0, 0), (0, 0), (0, dq - dv))) \
+            if dq != dv else vfull
+        o = flash_attention(q, k, vpad, causal=True, window=window)
+        o = o[..., :dv]
+        if mode == "prefill":
+            S = cache["ckv"].shape[1]
+            new_cache = dict(ckv=cache["ckv"].at[:, :L].set(ckv),
+                             krope=cache["krope"].at[:, :L].set(krope))
+    out = o.reshape(B, -1, H * dv) @ wgather(p["wo"], cfg,
+                                             ("heads", "embed"))
+    return out, new_cache
+
+
+# ===================================================================== #
+# Cross-attention (VLM/audio encoder embeddings; KV cached once per image)
+# ===================================================================== #
+def cross_attn_specs(cfg: ModelConfig) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamSpec((D, H * hd), ("embed", "heads")),
+        "wk": ParamSpec((D, KV * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((D, KV * hd), ("embed", "kv_heads")),
+        "wo": ParamSpec((H * hd, D), ("heads", "embed")),
+        "gate": ParamSpec((1,), (None,), "zeros"),   # llama3.2-v tanh gate
+    }
+
+
+def cross_attn_apply(cfg: ModelConfig, p, x, enc, *, mode="full",
+                     cache=None):
+    """x: (B,L,D) queries; enc: (B,Le,D) projected encoder states.
+    In decode mode the K/V of the encoder come precomputed from ``cache``
+    (filled at prefill — image K/V lives outside the decode hot loop)."""
+    B, L, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, L, H, hd)
+    if mode == "decode":
+        assert cache is not None
+        k, v = cache["xk"], cache["xv"]
+        new_cache = cache
+    else:
+        k = (enc @ p["wk"]).reshape(B, -1, KV, hd)
+        v = (enc @ p["wv"]).reshape(B, -1, KV, hd)
+        new_cache = dict(xk=k.astype(cache["xk"].dtype),
+                         xv=v.astype(cache["xv"].dtype)) \
+            if cache is not None else dict(xk=k, xv=v)
+    o = flash_attention(q, k, v, causal=False)
+    out = (o.reshape(B, L, H * hd) @ p["wo"])
+    out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
+    return out, new_cache
+
+
+# ===================================================================== #
+# Dense SwiGLU MLP
+# ===================================================================== #
+def mlp_specs(cfg: ModelConfig, d_ff=None) -> dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_gate": ParamSpec((D, F), ("embed", "mlp")),
+        "w_up": ParamSpec((D, F), ("embed", "mlp")),
+        "w_down": ParamSpec((F, D), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p, x, cfg=None):
+    wg = (lambda w, axes: wgather(w, cfg, axes)) if cfg is not None \
+        else (lambda w, axes: w)
+    h = (jax.nn.silu(x @ wg(p["w_gate"], ("embed", "mlp")))
+         * (x @ wg(p["w_up"], ("embed", "mlp"))))
+    return h @ wg(p["w_down"], ("mlp", "embed"))
+
+
+# ===================================================================== #
+# MoE (capacity-based scatter dispatch; experts sharded over `model`)
+# ===================================================================== #
+def moe_specs(cfg: ModelConfig) -> dict:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    s = {
+        "router": ParamSpec((D, E), ("embed", None)),
+        "w_gate": ParamSpec((E, D, F), ("experts", "embed", "mlp")),
+        "w_up": ParamSpec((E, D, F), ("experts", "embed", "mlp")),
+        "w_down": ParamSpec((E, F, D), ("experts", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = mlp_specs(cfg, d_ff=cfg.n_shared_experts * cfg.moe_d_ff)
+    return s
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    """x: (B,L,D) -> (out, aux_loss).  Top-k capacity dispatch via scatter:
+    tokens are written into a per-expert (E, C, D) buffer (overflow dropped),
+    experts run as one batched einsum, results are gathered back weighted by
+    the (renormalized) router gates.  Dispatch cost is O(T·k·E) int ops for
+    the position cumsum — no (T, E, C) one-hot is ever built."""
+    B, L, D = x.shape
+    T = B * L
+    E, K = cfg.n_experts, cfg.top_k
+    xf = x.reshape(T, D)
+    logits = (xf @ p["router"]).astype(jnp.float32)             # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)             # (T,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(np.ceil(T * K / E * cfg.capacity_factor))
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)     # (T,K,E)
+    flat = onehot.reshape(T * K, E)
+    pos = (jnp.cumsum(flat, axis=0) * flat).sum(-1) - 1         # (T*K,)
+    e_flat = expert_idx.reshape(T * K)
+    slot = jnp.where(pos < cap, e_flat * cap + pos, E * cap)    # OOB -> drop
+
+    # Dispatch via an index-inversion GATHER rather than a row scatter:
+    # scattering (T*K, D) value rows makes GSPMD materialize per-element
+    # u32 index matrices; scattering the (T*K,) scalar row-ids and then
+    # row-gathering keeps all index tensors 1-D.
+    inv = jnp.full((E * cap,), T, jnp.int32).at[slot].set(
+        jnp.arange(T * K, dtype=jnp.int32) // K, mode="drop")
+    xf_ext = jnp.concatenate([xf, jnp.zeros((1, D), x.dtype)], axis=0)
+    ein = jnp.take(xf_ext, inv, axis=0).reshape(E, cap, D)
+    w_g = wgather(p["w_gate"], cfg, ("experts", "embed", "mlp"))
+    w_u = wgather(p["w_up"], cfg, ("experts", "embed", "mlp"))
+    w_d = wgather(p["w_down"], cfg, ("experts", "mlp", "embed"))
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", ein, w_g))
+         * jnp.einsum("ecd,edf->ecf", ein, w_u))
+    eout = jnp.einsum("ecf,efd->ecd", h, w_d).reshape(E * cap, D)
+    eout_ext = jnp.concatenate([eout, jnp.zeros((1, D), eout.dtype)], axis=0)
+    gathered = jnp.take(eout_ext, jnp.minimum(slot, E * cap),
+                        axis=0)                                  # (T*K,D)
+    valid = (pos < cap).astype(x.dtype)
+    w = (gate_vals.reshape(T * K).astype(x.dtype) * valid)[:, None]
+    out = (gathered * w).reshape(T, K, D).sum(1)
+
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(p["shared"], xf, cfg)
+
+    # aux losses: switch-style load balance + router z-loss
+    frac = onehot.sum(1).mean(0).astype(jnp.float32)            # (E,) tokens
+    imp = probs.mean(0)                                         # (E,)
+    aux = (cfg.router_aux_coef * E * jnp.sum(frac * imp) / K
+           + cfg.router_z_coef
+           * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2))
+    return out.reshape(B, L, D), aux
+
+
+# ===================================================================== #
+# Mamba2 (SSD) mixer
+# ===================================================================== #
+def ssm_specs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    di, nh, N, G = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_ngroups
+    conv_dim = di + 2 * G * N
+    in_dim = 2 * di + 2 * G * N + nh
+    return {
+        "w_in": ParamSpec((D, in_dim), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), (None, "mlp")),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), "zeros"),
+        "A_log": ParamSpec((nh,), (None,), "zeros"),
+        "D_skip": ParamSpec((nh,), (None,), "ones"),
+        "dt_bias": ParamSpec((nh,), (None,), "zeros"),
+        "out_norm": ParamSpec((di,), ("mlp",), "ones"),
+        "w_out": ParamSpec((di, D), ("mlp", "embed")),
+    }
+
+
+def segsum(x):
+    """x: (..., q) -> (..., q, q) lower-triangular segment sums."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(X, dt, A, B, C, chunk, initial_state=None, use_pallas=False):
+    """Chunked SSD scan (Mamba2 eq. via state-space duality).
+
+    X: (b,l,h,p)  dt: (b,l,h)  A: (h,)  B,C: (b,l,n)  [ngroups=1, shared]
+    Returns (Y: (b,l,h,p), final_state: (b,h,p,n)).
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.ssd_scan(X, dt, A, B, C, chunk, initial_state)
+    b, l, h, p = X.shape
+    n = B.shape[-1]
+    q = min(chunk, l)
+    nc = -(-l // q)
+    pad = nc * q - l
+    if pad:
+        X = jnp.pad(X, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Xc = X.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, n)
+    Cc = C.reshape(b, nc, q, n)
+    dA = dtc * A[None, None, None, :]                    # (b,c,q,h)
+    dA = jnp.moveaxis(dA, 3, 2)                          # (b,c,h,q)
+    Xd = Xc * dtc[..., None]                             # dt-discretized input
+
+    A_cs = jnp.cumsum(dA, -1)                            # (b,c,h,q)
+    Ldec = jnp.exp(segsum(dA))                           # (b,c,h,q,q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)
+    Y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", scores, Ldec, Xd)
+
+    # per-chunk end states
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)        # (b,c,h,q)
+    S_c = jnp.einsum("bchq,bcqn,bcqhp->bchpn", decay_states, Bc, Xd)
+    chunk_decay = jnp.exp(A_cs[..., -1])                 # (b,c,h)
+
+    def step(s, xs):
+        sc, dec = xs
+        s_out = s                                        # state entering chunk
+        s_next = s * dec[..., None, None] + sc
+        return s_next, s_out
+
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, h, p, n), jnp.float32))
+    S_c = S_c.astype(jnp.float32)
+    final, states_in = jax.lax.scan(
+        step, s0, (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)            # (b,c,h,p,n)
+    Y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp", Cc, states_in,
+                       jnp.exp(A_cs))
+    Y = (Y_diag + Y_off).reshape(b, nc * q, h, p)[:, :l]
+    return Y, final
+
+
+def ssm_cache_shape(cfg: ModelConfig, batch: int):
+    di, nh, N, G = (cfg.d_inner, cfg.ssm_nheads, cfg.ssm_state,
+                    cfg.ssm_ngroups)
+    conv_dim = di + 2 * G * N
+    return dict(conv=(batch, cfg.ssm_conv - 1, conv_dim),
+                state=(batch, nh, cfg.ssm_headdim, N))
+
+
+def ssm_apply(cfg: ModelConfig, p, x, *, mode, cache=None):
+    """Mamba2 block.  'full'/'prefill': chunked SSD; 'decode': O(1) step."""
+    B = x.shape[0]
+    di, nh, hp, N = (cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim,
+                     cfg.ssm_state)
+    G = cfg.ssm_ngroups
+    conv_dim = di + 2 * G * N
+    zxbcdt = x @ wgather(p["w_in"], cfg, ("embed", "mlp"))
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + conv_dim]
+    dt_raw = zxbcdt[..., di + conv_dim:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    new_cache = None
+
+    if mode == "decode":
+        assert cache is not None
+        win = jnp.concatenate([cache["conv"], xbc], axis=1)   # (B,K,conv_dim)
+        conv_out = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+        conv_out = jax.nn.silu(conv_out)
+        new_conv = win[:, 1:]
+        xi = conv_out[..., :di].reshape(B, nh, hp)
+        Bv = conv_out[..., di:di + N]
+        Cv = conv_out[..., di + N:di + 2 * N]
+        dt1 = dt[:, 0]                                        # (B,nh)
+        dA = jnp.exp(dt1 * A[None])                           # (B,nh)
+        dBx = jnp.einsum("bhp,bn->bhpn", xi * dt1[..., None], Bv)
+        state = cache["state"] * dA[..., None, None] + dBx.astype(
+            cache["state"].dtype)
+        y = jnp.einsum("bhpn,bn->bhp", state, Cv)
+        y = y + p["D_skip"][None, :, None] * xi
+        y = y.reshape(B, 1, di)
+        z = z
+        new_cache = dict(conv=new_conv, state=state)
+    else:
+        L = x.shape[1]
+        # causal depthwise conv via padding + windowed dot
+        K = cfg.ssm_conv
+        xp = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+        idx = jnp.arange(L)[:, None] + jnp.arange(K)[None, :]
+        win = xp[:, idx]                                      # (B,L,K,conv)
+        conv_out = jax.nn.silu(
+            jnp.einsum("blkc,kc->blc", win, p["conv_w"]) + p["conv_b"])
+        xi = conv_out[..., :di].reshape(B, L, nh, hp)
+        Bv = conv_out[..., di:di + N]
+        Cv = conv_out[..., di + N:di + 2 * N]
+        # TP over SSD heads: the (b,c,h,q,q) decay tensors are the memory
+        # peak of Mamba2 training and shard cleanly on h
+        xi = constrain_axis(xi, cfg, 2)
+        dt = constrain_axis(dt, cfg, 2)
+        Y, final = ssd_chunked(xi, dt, A, Bv, Cv, cfg.ssm_chunk,
+                               use_pallas=cfg.use_pallas)
+        Y = Y + p["D_skip"][None, None, :, None] * xi
+        y = Y.reshape(B, L, di)
+        if mode == "prefill":
+            new_conv = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):]
+            new_cache = dict(conv=new_conv,
+                             state=final.astype(cache["state"].dtype)
+                             if cache else final)
+    y = rmsnorm_gated(y.astype(x.dtype), z, p["out_norm"], cfg.rms_eps)
+    return (y @ wgather(p["w_out"], cfg, ("mlp", "embed"))
+            ).astype(x.dtype), new_cache

@@ -1,0 +1,50 @@
+"""Reward / critic models: transformer backbone + scalar value head.
+
+Matches DeepSpeed-Chat's design: the reward model scores a (prompt,
+response) pair with the value at the *last response token*; the critic
+reuses the same structure and emits per-token values for PPO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.models.modules import ParamSpec, init_tree
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    specs = T.param_specs(cfg)
+    specs.pop("lm_head", None)           # value head instead of LM head
+    specs["v_head"] = ParamSpec((cfg.d_model, 1), ("embed", None))
+    return specs
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    return init_tree(param_specs(cfg), key, cfg.pdtype)
+
+
+def values(cfg: ModelConfig, params, tokens, *, embeds=None,
+           encoder_embeds=None):
+    """Per-token scalar values: (B, L)."""
+    hidden, _, _ = T.forward(cfg, params, tokens=tokens, embeds=embeds,
+                             encoder_embeds=encoder_embeds, mode="full")
+    return (hidden @ params["v_head"]).astype(jnp.float32)[..., 0]
+
+
+def end_scores(cfg: ModelConfig, params, tokens, attn_mask):
+    """Score at the last non-pad token of each sequence: (B,)."""
+    v = values(cfg, params, tokens)
+    last = jnp.maximum(attn_mask.sum(-1) - 1, 0).astype(jnp.int32)
+    return jnp.take_along_axis(v, last[:, None], axis=1)[:, 0]
+
+
+def pairwise_loss(cfg: ModelConfig, params, chosen, rejected, chosen_mask,
+                  rejected_mask):
+    """DeepSpeed-Chat reward loss: -log sigmoid(r_chosen - r_rejected)."""
+    rc = end_scores(cfg, params, chosen, chosen_mask)
+    rr = end_scores(cfg, params, rejected, rejected_mask)
+    loss = -jax.nn.log_sigmoid(rc - rr).mean()
+    acc = (rc > rr).mean()
+    return loss, acc

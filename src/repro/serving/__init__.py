@@ -1,0 +1,4 @@
+from repro.serving.generate import decode_step, generate, prefill
+from repro.serving.sampling import sample
+
+__all__ = ["decode_step", "generate", "prefill", "sample"]

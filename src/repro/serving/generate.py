@@ -1,0 +1,88 @@
+"""Batched autoregressive generation: prefill + scanned decode.
+
+This is the RLHF *experience generation* hot loop the paper identifies as
+memory-bandwidth-bound — each step touches every weight once to emit one
+token per sequence.  The Hybrid Engine runs this function under the TP
+(inference) param layout.
+
+Prompts are fixed-length per batch (the paper's own benchmark recipe:
+256 prompt + 256 generated tokens); the cache is preallocated to
+``prompt_len + max_new_tokens`` (or the sliding window, if smaller).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.sampling import sample
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, *, embeds=None,
+            encoder_embeds=None):
+    """Run the prompt through the model, filling ``cache``.
+    Returns (last-position logits (B, V), cache)."""
+    hidden, cache, _ = T.forward(cfg, params, tokens=tokens, embeds=embeds,
+                                 encoder_embeds=encoder_embeds,
+                                 mode="prefill", cache=cache)
+    logits = T.logits_fn(cfg, params, hidden[:, -1:])[:, 0]
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, position, *,
+                embeds=None, encoder_embeds=None):
+    """One decode step.  token: (B,) int32; position: (B,) absolute.
+    Returns (logits (B, V), new_cache)."""
+    kw = {}
+    if cfg.embed_inputs:
+        kw["tokens"] = token[:, None]
+    else:
+        kw["embeds"] = embeds
+    hidden, cache, _ = T.forward(cfg, params, mode="decode", cache=cache,
+                                 positions=position[:, None],
+                                 encoder_embeds=encoder_embeds, **kw)
+    logits = T.logits_fn(cfg, params, hidden)[:, 0]
+    return logits, cache
+
+
+def generate(cfg: ModelConfig, params, tokens, key, *, max_new_tokens: int,
+             temperature: float = 1.0, top_k: int = 0,
+             eos_id: Optional[int] = None, encoder_embeds=None):
+    """tokens: (B, Lp) fixed-length prompts.  Returns dict with
+    ``sequences`` (B, Lp + max_new), ``response_mask`` (B, Lp + max_new)
+    marking generated (pre-EOS) tokens."""
+    B, Lp = tokens.shape
+    total = Lp + max_new_tokens
+    S = total if cfg.sliding_window is None else min(
+        total, cfg.sliding_window)
+    del S  # cache sizing handled by init_cache via cfg window
+    cache = T.init_cache(cfg, B, total)
+    logits, cache = prefill(cfg, params, tokens, cache,
+                            encoder_embeds=encoder_embeds)
+
+    def step(carry, _):
+        logits, cache, key, pos, done = carry
+        key, sub = jax.random.split(key)
+        tok = sample(logits, sub, temperature=temperature, top_k=top_k)
+        if eos_id is not None:
+            tok = jnp.where(done, eos_id, tok)
+        logits, cache = decode_step(cfg, params, tok, cache, pos,
+                                    encoder_embeds=encoder_embeds)
+        new_done = done | (tok == eos_id) if eos_id is not None else done
+        return (logits, cache, key, pos + 1, new_done), (tok, done)
+
+    pos0 = jnp.full((B,), Lp, jnp.int32)
+    done0 = jnp.zeros((B,), bool)
+    (_, cache, _, _, _), (toks, was_done) = jax.lax.scan(
+        step, (logits, cache, key, pos0, done0), None,
+        length=max_new_tokens)
+    gen = toks.T                                   # (B, max_new)
+    resp_mask = (~was_done.T)
+    sequences = jnp.concatenate([tokens, gen], axis=1)
+    mask = jnp.concatenate(
+        [jnp.zeros((B, Lp), bool), resp_mask], axis=1)
+    return {"sequences": sequences, "response_mask": mask, "cache": cache}

@@ -1,0 +1,18 @@
+"""Token sampling: temperature / top-k / greedy, jit-friendly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sample(logits, key, *, temperature: float = 1.0, top_k: int = 0):
+    """logits: (B, V) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, NEG_INF, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

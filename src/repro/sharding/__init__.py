@@ -1,0 +1,8 @@
+from repro.sharding.strategy import (STRATEGIES, batch_pspec, cache_pspecs,
+                                     data_axes, opt_rules_for, param_pspecs,
+                                     param_shardings, pspecs_for_tree,
+                                     rules_for, spec_to_pspec)
+
+__all__ = ["STRATEGIES", "batch_pspec", "cache_pspecs", "data_axes",
+           "opt_rules_for", "param_pspecs", "param_shardings",
+           "pspecs_for_tree", "rules_for", "spec_to_pspec"]

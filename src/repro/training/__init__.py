@@ -1,0 +1,4 @@
+from repro.training import checkpoint, optimizer, schedules, steps
+from repro.training.train_state import TrainState
+
+__all__ = ["checkpoint", "optimizer", "schedules", "steps", "TrainState"]

@@ -1,0 +1,63 @@
+"""AdamW as pure pytree transforms (no optax dependency).
+
+Optimizer state is a pytree shaped like params; under ZeRO strategies the
+state inherits the ZeRO-3 sharding even when params are replicated (that is
+exactly ZeRO stage 1).  ``trainable_mask`` supports LoRA-style partial
+training: masked-off leaves keep params and state frozen.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    m: dict
+    v: dict
+    step: jnp.ndarray
+
+
+def init(params) -> AdamState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamState(m=jax.tree.map(z, params), v=jax.tree.map(z, params),
+                     step=jnp.zeros((), jnp.int32))
+
+
+def update(params, grads, state: AdamState, *, lr, b1=0.9, b2=0.95,
+           eps=1e-8, weight_decay=0.0, grad_clip: Optional[float] = 1.0,
+           trainable_mask=None):
+    step = state.step + 1
+    if grad_clip is not None:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    else:
+        gnorm = jnp.zeros(())
+
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def new_m(g, m):
+        return b1 * m + (1 - b1) * g.astype(jnp.float32)
+
+    def new_v(g, v):
+        g32 = g.astype(jnp.float32)
+        return b2 * v + (1 - b2) * g32 * g32
+
+    def new_p(p, m, v):
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        upd = upd + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+    m_new = jax.tree.map(new_m, grads, state.m)
+    v_new = jax.tree.map(new_v, grads, state.v)
+    p_new = jax.tree.map(new_p, params, m_new, v_new)
+    if trainable_mask is not None:
+        sel = lambda t, a, b: jnp.where(t, a, b)
+        p_new = jax.tree.map(sel, trainable_mask, p_new, params)
+        m_new = jax.tree.map(sel, trainable_mask, m_new, state.m)
+        v_new = jax.tree.map(sel, trainable_mask, v_new, state.v)
+    return p_new, AdamState(m=m_new, v=v_new, step=step), gnorm

@@ -1,0 +1,20 @@
+"""LR schedules (cosine with linear warmup — DeepSpeed-Chat's default)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(base_lr: float, warmup: int, total: int,
+                  min_ratio: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def constant(base_lr: float):
+    return lambda step: jnp.full((), base_lr, jnp.float32)

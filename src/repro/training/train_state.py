@@ -1,0 +1,28 @@
+"""TrainState pytree: params + AdamW state + step counter."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.training import optimizer as opt
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt.AdamState
+    step: jnp.ndarray
+
+    @classmethod
+    def create(cls, params) -> "TrainState":
+        return cls(params=params, opt=opt.init(params),
+                   step=jnp.zeros((), jnp.int32))
+
+    def apply_gradients(self, grads, *, lr, weight_decay=0.0,
+                        grad_clip=1.0, trainable_mask=None) -> "TrainState":
+        p, o, gnorm = opt.update(self.params, grads, self.opt, lr=lr,
+                                 weight_decay=weight_decay,
+                                 grad_clip=grad_clip,
+                                 trainable_mask=trainable_mask)
+        return TrainState(params=p, opt=o, step=self.step + 1), gnorm

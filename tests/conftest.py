@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device; ONLY the dry-run process forces
+# 512 placeholder devices (see src/repro/launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,82 @@
+"""Data layer: blending proportions, stage-split disjointness (hypothesis),
+batch contracts, oracle learnability, tokenizer roundtrip."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (ByteTokenizer, ConstantTaskDataset, CopyTaskDataset,
+                        DataBlender, SortTaskDataset, stage_split)
+
+
+@given(st.integers(10, 5000),
+       st.lists(st.floats(0.1, 10.0), min_size=2, max_size=5))
+@settings(max_examples=30, deadline=None)
+def test_stage_split_disjoint_and_covering(n, weights):
+    parts = stage_split(n, weights)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n          # disjoint + covering
+    # sizes roughly proportional
+    w = np.asarray(weights) / np.sum(weights)
+    for p, wi in zip(parts, w):
+        assert abs(len(p) - wi * n) <= len(weights) + 1
+
+
+def test_blending_proportions():
+    ds = [ConstantTaskDataset(3000, 4, 4, 32, seed=1),
+          CopyTaskDataset(3000, 4, 4, 32, seed=2),
+          SortTaskDataset(3000, 4, 4, 32, seed=3)]
+    bl = DataBlender(ds, [0.6, 0.3, 0.1], seed=0)
+    counts = np.zeros(3)
+    for batch in bl.prompt_batches(64, 30):
+        for i in batch["dataset_idx"]:
+            counts[i] += 1
+    frac = counts / counts.sum()
+    np.testing.assert_allclose(frac, [0.6, 0.3, 0.1], atol=0.06)
+
+
+def test_stage_pools_do_not_leak():
+    """The same example index never appears in two stages' batches."""
+    ds = [CopyTaskDataset(300, 4, 4, 32, seed=5)]
+    bl = DataBlender(ds, seed=0)
+    pools = bl.splits[0]
+    s0 = set(pools[0].tolist())
+    s1 = set(pools[1].tolist())
+    s2 = set(pools[2].tolist())
+    assert not (s0 & s1) and not (s1 & s2) and not (s0 & s2)
+    assert len(s0 | s1 | s2) == 300
+
+
+def test_batch_shapes_and_masks():
+    ds = [CopyTaskDataset(100, 6, 10, 32, seed=1)]
+    bl = DataBlender(ds, seed=0)
+    b = next(bl.sft_batches(4, 1))
+    assert b["tokens"].shape == (4, 16)
+    assert b["labels"].shape == (4, 16)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    # loss mask covers exactly the response predictions
+    assert b["mask"].sum(1).tolist() == [10.0] * 4
+    r = next(bl.reward_batches(4, 1))
+    assert r["chosen"].shape == r["rejected"].shape == (4, 16)
+    p = next(bl.prompt_batches(4, 1))
+    assert p["prompts"].shape == (4, 6)
+
+
+def test_oracle_scores():
+    for cls in [CopyTaskDataset, SortTaskDataset, ConstantTaskDataset]:
+        ds = cls(50, 8, 8, 32, seed=9)
+        for i in [0, 7, 23]:
+            pr = ds.get_prompt(i)
+            assert ds.score(pr, ds.get_chosen(i)) == 1.0
+            assert ds.score(pr, ds.get_rejected(i)) < 0.5
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    s = "Hello, DeepSpeed-Chat! 你好"
+    ids = tok.encode(s, add_bos=True)
+    assert ids[0] == tok.bos_id
+    assert tok.decode(ids) == s
+    padded = tok.encode("hi", max_len=10)
+    assert padded.shape == (10,)
+    assert (padded[3:] == tok.pad_id).all()

@@ -1,0 +1,240 @@
+"""Model-level behaviour: flash attention vs naive (fwd + grad),
+prefill/decode KV-cache parity with the full forward, sliding-window ring
+buffer, MLA absorbed decode, RoPE properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.models.modules import apply_rope, flash_attention
+
+KEY = jax.random.PRNGKey(7)
+
+
+def naive_attention(q, k, v, causal=True, window=None, qpos0=0):
+    B, Lq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, kk) / np.sqrt(D)
+    qpos = qpos0 + jnp.arange(Lq)
+    kpos = jnp.arange(k.shape[1])
+    m = jnp.ones((Lq, k.shape[1]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqs,bshd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("Lq,Lk,H,KV,D,causal,win,qb,kb,qpos0", [
+    (37, 37, 4, 2, 16, True, None, 16, 16, 0),
+    (64, 64, 8, 8, 32, True, 7, 32, 16, 0),
+    (16, 48, 4, 1, 8, True, None, 8, 32, 32),
+    (33, 33, 6, 3, 24, False, None, 16, 8, 0),
+])
+def test_flash_vs_naive_fwd_and_grad(Lq, Lk, H, KV, D, causal, win, qb, kb,
+                                     qpos0):
+    B = 2
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (B, Lq, H, D))
+    k = jax.random.normal(k2, (B, Lk, KV, D))
+    v = jax.random.normal(k3, (B, Lk, KV, D))
+    fa = lambda *a: (flash_attention(
+        a[0], a[1], a[2], causal=causal, window=win, q_block=qb,
+        k_block=kb, qpos0=qpos0) ** 2).sum()
+    na = lambda *a: (naive_attention(a[0], a[1], a[2], causal, win,
+                                     qpos0) ** 2).sum()
+    o = flash_attention(q, k, v, causal=causal, window=win, q_block=qb,
+                        k_block=kb, qpos0=qpos0)
+    np.testing.assert_allclose(np.asarray(o),
+                               np.asarray(naive_attention(q, k, v, causal,
+                                                          win, qpos0)),
+                               rtol=1e-4, atol=1e-4)
+    gf = jax.grad(fa, argnums=(0, 1, 2))(q, k, v)
+    gn = jax.grad(na, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gn):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab_size=101, compute_dtype="float32", remat=False)
+
+FAMILIES = {
+    "dense": ModelConfig(name="d", arch_type="dense", qk_norm=True, **BASE),
+    "sliding": ModelConfig(name="sw", arch_type="dense", sliding_window=8,
+                           **BASE),
+    "mla": ModelConfig(name="m", arch_type="dense", mla=True,
+                       kv_lora_rank=32, qk_nope_head_dim=16,
+                       qk_rope_head_dim=8, v_head_dim=16, **BASE),
+    "moe": ModelConfig(name="e", arch_type="moe", moe=True, n_experts=4,
+                       top_k=2, moe_d_ff=64, n_shared_experts=1,
+                       capacity_factor=2.0, **BASE),
+    "ssm": ModelConfig(name="s", arch_type="ssm",
+                       **{**BASE, "n_heads": 0, "n_kv_heads": 0, "d_ff": 0,
+                          "ssm_state": 16, "ssm_headdim": 16,
+                          "ssm_chunk": 4}),
+    "hybrid": ModelConfig(name="h", arch_type="hybrid", attn_every=2,
+                          ssm_state=16, ssm_headdim=16, ssm_chunk=4,
+                          **{**BASE, "n_layers": 4}),
+    "vlm": ModelConfig(name="v", arch_type="vlm", cross_attn_every=2,
+                       encoder_dim=48, encoder_len=10,
+                       **{**BASE, "n_layers": 4}),
+    "audio": ModelConfig(name="a", arch_type="audio", embed_inputs=False,
+                         **BASE),
+}
+
+
+def _inputs(cfg, B, L, key):
+    kw = {}
+    if cfg.embed_inputs:
+        kw["tokens"] = jax.random.randint(key, (B, L), 0, cfg.vocab_size)
+    else:
+        kw["embeds"] = jax.random.normal(key, (B, L, cfg.d_model)) * 0.02
+    if cfg.arch_type == "vlm":
+        kw["encoder_embeds"] = jax.random.normal(
+            key, (B, cfg.encoder_len, cfg.encoder_dim)) * 0.02
+    return kw
+
+
+def _slice(kw, sl):
+    out = dict(kw)
+    if "tokens" in out:
+        out["tokens"] = out["tokens"][:, sl]
+    else:
+        out["embeds"] = out["embeds"][:, sl]
+    return out
+
+
+@pytest.mark.parametrize("family", list(FAMILIES))
+def test_prefill_decode_parity(family):
+    cfg = FAMILIES[family]
+    B, L, Lp = 2, 16, 8
+    params = T.init_params(cfg, KEY)
+    kw = _inputs(cfg, B, L, KEY)
+    h_full, _, _ = T.forward(cfg, params, mode="full", **kw)
+    lf = T.logits_fn(cfg, params, h_full)
+
+    cache = T.init_cache(cfg, B, 32)
+    h_pre, cache, _ = T.forward(cfg, params, mode="prefill", cache=cache,
+                                **_slice(kw, slice(0, Lp)))
+    outs = [T.logits_fn(cfg, params, h_pre[:, -1:])]
+    for t in range(Lp, L):
+        pos = jnp.full((B, 1), t)
+        hd, cache, _ = T.forward(cfg, params, mode="decode", cache=cache,
+                                 positions=pos, **_slice(kw, slice(t, t + 1)))
+        outs.append(T.logits_fn(cfg, params, hd))
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec),
+                               np.asarray(lf[:, Lp - 1:L]),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_ring_buffer_beyond_window():
+    """Decoding past the window: ring cache must equal windowed full attn."""
+    cfg = FAMILIES["sliding"]          # window 8
+    B, L = 1, 24
+    params = T.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (B, L), 0, cfg.vocab_size)
+    h_full, _, _ = T.forward(cfg, params, tokens=toks, mode="full")
+    lf = T.logits_fn(cfg, params, h_full)
+    cache = T.init_cache(cfg, B, L)    # capped at window=8 internally
+    assert cache[0][0]["k"].shape[2] == 8
+    h, cache, _ = T.forward(cfg, params, tokens=toks[:, :8], mode="prefill",
+                            cache=cache)
+    outs = [T.logits_fn(cfg, params, h[:, -1:])]
+    for t in range(8, L):
+        hd, cache, _ = T.forward(cfg, params, tokens=toks[:, t:t + 1],
+                                 mode="decode", cache=cache,
+                                 positions=jnp.full((B, 1), t))
+        outs.append(T.logits_fn(cfg, params, hd))
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(lf[:, 7:L]),
+                               rtol=5e-3, atol=5e-3)
+
+
+@given(st.integers(0, 1000), st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_rope_preserves_norm(pos, dim_half):
+    """RoPE is a rotation: per-pair L2 norm is invariant."""
+    d = dim_half * 2
+    x = jax.random.normal(jax.random.PRNGKey(pos), (1, 1, 2, d))
+    p = jnp.full((1, 1), pos)
+    y = apply_rope(x, p, theta=10000.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(x)),
+                               float(jnp.linalg.norm(y)), rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """<rope(q,m), rope(k,n)> depends only on m - n."""
+    d = 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+    def dot(m, n):
+        qm = apply_rope(q, jnp.full((1, 1), m), 10000.0)
+        kn = apply_rope(k, jnp.full((1, 1), n), 10000.0)
+        return float((qm * kn).sum())
+    np.testing.assert_allclose(dot(5, 3), dot(105, 103), rtol=1e-4)
+    np.testing.assert_allclose(dot(17, 0), dot(117, 100), rtol=1e-4)
+
+
+def test_moe_dispatch_conservation():
+    """With ample capacity every token is routed: output = sum of top-k
+    expert outputs weighted by renormalized gates; aux loss finite."""
+    cfg = FAMILIES["moe"]
+    params = T.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    h, _, aux = T.forward(cfg, params, tokens=toks, mode="full")
+    assert np.isfinite(float(aux)) and float(aux) > 0
+    assert np.isfinite(np.asarray(h)).all()
+
+
+def test_kv_quant_decode_parity():
+    """int8 KV cache: decode matches the fp path within quantization
+    tolerance and agrees on argmax (what generation consumes)."""
+    cfg = FAMILIES["dense"].replace(kv_quant=True)
+    B, L, Lp = 2, 16, 8
+    params = T.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (B, L), 0, cfg.vocab_size)
+    h, _, _ = T.forward(cfg, params, tokens=toks, mode="full")
+    lf = T.logits_fn(cfg, params, h)
+    cache = T.init_cache(cfg, B, 32)
+    assert cache[0][0]["k"].dtype == jnp.int8
+    h2, cache, _ = T.forward(cfg, params, tokens=toks[:, :Lp],
+                             mode="prefill", cache=cache)
+    outs = [T.logits_fn(cfg, params, h2[:, -1:])]
+    for t in range(Lp, L):
+        hd, cache, _ = T.forward(cfg, params, tokens=toks[:, t:t + 1],
+                                 mode="decode", cache=cache,
+                                 positions=jnp.full((B, 1), t))
+        outs.append(T.logits_fn(cfg, params, hd))
+    dec = jnp.concatenate(outs, 1)
+    rel = float(jnp.abs(dec - lf[:, Lp - 1:L]).max()) / float(
+        jnp.abs(lf).max())
+    assert rel < 0.05
+    agree = float((jnp.argmax(dec, -1)
+                   == jnp.argmax(lf[:, Lp - 1:L], -1)).mean())
+    assert agree > 0.9
+
+
+def test_chunked_loss_matches_unchunked():
+    cfg = FAMILIES["dense"].replace(logit_chunk=4)
+    params = T.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    h, _, _ = T.forward(cfg, params, tokens=toks, mode="full")
+    mask = jnp.ones_like(toks, jnp.float32)
+    l_chunk = T.lm_loss(cfg, params, h, toks, mask)
+    l_full = T.lm_loss(cfg.replace(logit_chunk=0), params, h, toks, mask)
+    np.testing.assert_allclose(float(l_chunk), float(l_full), rtol=1e-5)
+    lp = T.per_token_logprobs(cfg, params, h, toks)
+    lp_full = T.per_token_logprobs(cfg.replace(logit_chunk=0), params, h,
+                                   toks)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lp_full),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,105 @@
+"""Sharding rules: divisibility-aware resolution, strategy semantics, and
+that every assigned arch's param tree resolves on the production mesh
+shape (checked structurally — no devices needed)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.models import transformer as T
+from repro.models.modules import ParamSpec
+from repro.sharding import strategy as S
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape and .axis_names are consulted."""
+    def __init__(self, shape_dict):
+        self.shape = shape_dict
+        self.axis_names = tuple(shape_dict)
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_ddp_replicates_everything():
+    rules = S.rules_for("ddp", SINGLE)
+    spec = ParamSpec((1024, 512), ("embed", "mlp"))
+    assert S.spec_to_pspec(spec, rules, SINGLE) == P(None, None)
+
+
+def test_zero3_shards_embed_over_data_and_mlp_over_model():
+    rules = S.rules_for("zero3", SINGLE)
+    spec = ParamSpec((1024, 512), ("embed", "mlp"))
+    assert S.spec_to_pspec(spec, rules, SINGLE) == P("data", "model")
+
+
+def test_indivisible_axis_falls_back_to_replication():
+    rules = S.rules_for("zero3", SINGLE)
+    # vocab 50280 is not divisible by 16 -> replicated
+    spec = ParamSpec((50280, 1024), ("vocab", "embed"))
+    ps = S.spec_to_pspec(spec, rules, SINGLE)
+    assert ps == P(None, "data")
+
+
+def test_no_mesh_axis_used_twice_per_tensor():
+    rules = S.rules_for("tp", SINGLE)
+    spec = ParamSpec((256, 256), ("heads", "mlp"))  # both want "model"
+    ps = S.spec_to_pspec(spec, rules, SINGLE)
+    assert ps == P("model", None)
+
+
+def test_inference_layout_expert_parallel():
+    rules = S.rules_for("tp", SINGLE)
+    spec = ParamSpec((16, 5120, 8192), ("experts", "embed", "mlp"))
+    ps = S.spec_to_pspec(spec, rules, SINGLE)
+    assert ps == P("data", None, "model")
+
+
+def test_multipod_zero3_embed_over_pod_and_data():
+    rules = S.rules_for("zero3", MULTI)
+    spec = ParamSpec((4096, 12288), ("embed", "mlp"))
+    ps = S.spec_to_pspec(spec, rules, MULTI)
+    assert ps == P(("pod", "data"), "model")
+
+
+def test_zero1_params_replicated_but_opt_sharded():
+    prules = S.rules_for("zero1", SINGLE)
+    orules = S.opt_rules_for("zero1", SINGLE)
+    spec = ParamSpec((1024, 512), ("embed", "mlp"))
+    assert S.spec_to_pspec(spec, prules, SINGLE) == P(None, None)
+    assert S.spec_to_pspec(spec, orules, SINGLE) == P("data", "model")
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+@pytest.mark.parametrize("strategy", ["ddp", "zero3", "tp"])
+def test_all_arch_param_trees_resolve(arch, strategy):
+    cfg = ARCHS[arch]
+    for mesh in (SINGLE, MULTI):
+        pspecs = S.param_pspecs(cfg, mesh, strategy)
+        specs = T.param_specs(cfg)
+
+        def check(sp, ps):
+            assert len(ps) <= len(sp.shape)
+            used = [a for a in jax.tree_util.tree_leaves(tuple(ps))
+                    if a is not None]
+            # divisibility of every sharded dim
+            for dim, axis in zip(sp.shape, tuple(ps) + (None,) * 8):
+                if axis is None:
+                    continue
+                axes = (axis,) if isinstance(axis, str) else axis
+                size = int(np.prod([mesh.shape[a] for a in axes]))
+                assert dim % size == 0, (arch, sp.shape, ps)
+
+        jax.tree_util.tree_map(
+            check, specs, pspecs,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def test_batch_pspec():
+    assert S.batch_pspec(SINGLE, 256, 2) == P("data", None)
+    assert S.batch_pspec(SINGLE, 1, 2) == P(None, None)
+    assert S.batch_pspec(MULTI, 256, 3) == P(("pod", "data"), None, None)
+    # batch divisible by data but not pod*data
+    assert S.batch_pspec(MULTI, 16, 2) == P("data", None)

@@ -1,0 +1,111 @@
+"""End-to-end system behaviour: the 3-stage RLHF pipeline improves its
+objectives on a tiny model; Hybrid Engine layout roundtrip is exact;
+generation respects EOS and shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HybridEngine, PPOConfig, RLHFEngine, RLHFPipeline,
+                        StageConfig)
+from repro.core.ppo import PPOTrainer
+from repro.data import ConstantTaskDataset, CopyTaskDataset, DataBlender
+from repro.launch.mesh import make_local_mesh
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.serving.generate import generate
+
+V = 64
+ACTOR = ModelConfig(name="a", arch_type="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=V,
+                    compute_dtype="float32", remat=False)
+CRITIC = ACTOR.replace(name="c")
+
+
+@pytest.fixture(scope="module")
+def pipeline_result():
+    ds = [ConstantTaskDataset(400, 8, 8, V, seed=1),
+          CopyTaskDataset(400, 8, 8, V, seed=2)]
+    bl = DataBlender(ds, [0.7, 0.3], seed=0)
+    eng = RLHFEngine(ACTOR, CRITIC, jax.random.PRNGKey(0))
+    pipe = RLHFPipeline(
+        eng, bl,
+        StageConfig(sft_steps=60, sft_batch=16, rm_steps=50, rm_batch=16,
+                    ppo_steps=10, ppo_batch=8),
+        PPOConfig(max_new_tokens=8, temperature=1.0, ptx_coef=0.05))
+    out = pipe.run()
+    return out
+
+
+def test_sft_loss_decreases(pipeline_result):
+    losses = pipeline_result["sft_loss"]
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.3
+
+
+def test_reward_model_learns_ranking(pipeline_result):
+    accs = pipeline_result["rm_acc"]
+    assert np.mean(accs[-10:]) > 0.7
+
+
+def test_ppo_runs_and_is_finite(pipeline_result):
+    scores = pipeline_result["ppo_scores"]
+    assert len(scores) == 10
+    assert np.isfinite(scores).all()
+
+
+def test_hybrid_engine_roundtrip_exact():
+    mesh = make_local_mesh()
+    he = HybridEngine(ACTOR, mesh)
+    params = T.init_params(ACTOR, jax.random.PRNGKey(1))
+    pi = he.to_inference(params)
+    pt = he.to_train(pi)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(pt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hybrid_engine_analytics():
+    mesh = make_local_mesh()
+    he = HybridEngine(ACTOR, mesh)
+    n_tok = 256
+    # HE gathers once per phase; naive ZeRO-3 generation gathers per token
+    assert (he.naive_generation_gather_bytes(n_tok)
+            == n_tok * he.reshard_bytes_per_phase())
+    assert he.param_bytes() > 0
+
+
+def test_generation_contract():
+    params = T.init_params(ACTOR, jax.random.PRNGKey(2))
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (4, 6), 0, V)
+    out = generate(ACTOR, params, prompts, jax.random.PRNGKey(4),
+                   max_new_tokens=5, temperature=1.0)
+    assert out["sequences"].shape == (4, 11)
+    np.testing.assert_array_equal(np.asarray(out["sequences"][:, :6]),
+                                  np.asarray(prompts))
+    assert out["response_mask"][:, :6].sum() == 0
+    # greedy decoding is deterministic
+    o1 = generate(ACTOR, params, prompts, jax.random.PRNGKey(5),
+                  max_new_tokens=5, temperature=0.0)
+    o2 = generate(ACTOR, params, prompts, jax.random.PRNGKey(6),
+                  max_new_tokens=5, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(o1["sequences"]),
+                                  np.asarray(o2["sequences"]))
+
+
+def test_generation_matches_score_forward():
+    """Logprobs recomputed by make_experience over generated sequences are
+    the logprobs of exactly those tokens (parity between the KV-cache
+    generation path and the full scoring forward)."""
+    from repro.core.ppo import actor_logprobs
+    params = T.init_params(ACTOR, jax.random.PRNGKey(7))
+    prompts = jax.random.randint(jax.random.PRNGKey(8), (2, 6), 0, V)
+    out = generate(ACTOR, params, prompts, jax.random.PRNGKey(9),
+                   max_new_tokens=4, temperature=0.0)
+    seq = out["sequences"]
+    lp = actor_logprobs(ACTOR, params, seq)
+    # greedy tokens must be the argmax under the scoring forward
+    hidden, _, _ = T.forward(ACTOR, params, tokens=seq, mode="full")
+    logits = T.logits_fn(ACTOR, params, hidden)
+    greedy = jnp.argmax(logits[:, 5:-1], -1)
+    np.testing.assert_array_equal(np.asarray(greedy),
+                                  np.asarray(seq[:, 6:]))
+    assert np.isfinite(np.asarray(lp)).all()
