@@ -67,6 +67,9 @@ def _measured_stage_breakdown():
         PPOConfig(max_new_tokens=8))
     out = pipe.run()
     t = out["timings"]
-    return [(f"t46_measured_{k}", v * 1e6,
+    rows = [(f"t46_measured_{k}", v * 1e6,
              f"{v/sum(t.values()):.1%}_of_total")
             for k, v in t.items()]
+    rows.append(("t46_measured_stage3_gen_tok_s", pipe.gen_tok_s,
+                 "engine_early_exit_path"))
+    return rows

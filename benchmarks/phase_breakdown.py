@@ -1,7 +1,12 @@
 """Figure 5 analogue: time/sequence breakdown of one RLHF stage-3
 iteration (generation vs training) — MEASURED on a reduced actor+reward
 pair on CPU.  The paper's point: generation dominates e2e time despite
-being ~20% of FLOPs."""
+being ~20% of FLOPs.
+
+Also measured: what the serving-grade engine buys inside that generation
+phase — early-exit chunked decode vs the fixed ``max_new_tokens`` scan on
+an EOS-rich workload (the fixed scan burns full decode steps after every
+sequence has finished)."""
 from __future__ import annotations
 
 import time
@@ -13,12 +18,50 @@ from repro.core.ppo import PPOConfig, PPOTrainer
 from repro.models.config import ModelConfig
 from repro.models import reward as R
 from repro.models import transformer as T
+from repro.serving.engine import GenerationEngine
+from repro.serving.generate import generate
 
 V = 128
 ACTOR = ModelConfig(name="bench-actor", arch_type="dense", n_layers=4,
                     d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
                     vocab_size=V, compute_dtype="float32", remat=False)
 CRITIC = ACTOR.replace(name="bench-critic", n_layers=2)
+
+
+def early_exit_rows():
+    """Fixed full-length decode scan vs the engine's chunked early exit,
+    same weights / sampler / EOS-rich workload (tiny vocab => sequences
+    finish long before the 64-token budget)."""
+    cfg = ACTOR.replace(name="bench-eos", vocab_size=8)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 1, 8)
+    max_new, eos = 64, 0
+    fixed = jax.jit(lambda p, pr, k: generate(
+        cfg, p, pr, k, max_new_tokens=max_new, eos_id=eos))
+    engine = GenerationEngine(cfg, max_new_tokens=max_new, eos_id=eos,
+                              chunk=8)
+    # warmup both
+    jax.block_until_ready(fixed(params, prompts, key)["sequences"])
+    engine.generate(params, prompts, key)
+
+    n = 5
+    t0 = time.perf_counter()
+    for i in range(n):
+        out = fixed(params, prompts, jax.random.PRNGKey(i))
+        jax.block_until_ready(out["sequences"])
+    fixed_s = (time.perf_counter() - t0) / n
+    t0 = time.perf_counter()
+    for i in range(n):
+        engine.generate(params, prompts, jax.random.PRNGKey(i))
+    engine_s = (time.perf_counter() - t0) / n
+    steps = engine.last_stats["decode_steps"]
+    return [
+        ("fig5_decode_fixed_scan", fixed_s * 1e6, f"{max_new}_steps"),
+        ("fig5_decode_early_exit", engine_s * 1e6,
+         f"{steps}_of_{max_new}_steps"),
+        ("fig5_early_exit_speedup", fixed_s / engine_s, "same_tokens"),
+    ]
 
 
 def run():
@@ -37,10 +80,11 @@ def run():
     trainer.train_rlhf(exp)
 
     n = 3
+    gm = {}
     t0 = time.perf_counter()
     for i in range(n):
-        exp, _ = trainer.generate_experience(prompts,
-                                             jax.random.PRNGKey(i))
+        exp, gm = trainer.generate_experience(prompts,
+                                              jax.random.PRNGKey(i))
     gen_s = (time.perf_counter() - t0) / n
     t0 = time.perf_counter()
     for _ in range(n):
@@ -52,5 +96,6 @@ def run():
         ("fig5_training_phase", train_s * 1e6, f"{train_s/e2e:.2%}_of_e2e"),
         ("fig5_e2e_iteration", e2e * 1e6,
          f"gen/train={gen_s/train_s:.2f}x"),
+        ("fig5_gen_tok_s", gm.get("gen_tok_s", 0.0), "engine_path"),
     ]
-    return rows
+    return rows + early_exit_rows()

@@ -68,6 +68,19 @@ class HybridEngine:
             return self._to_train(params)
 
     # ---------------------------------------------------------------- #
+    # generation engine (the serving-grade experience-generation path)
+    # ---------------------------------------------------------------- #
+    def generation_engine(self, **gen_kwargs):
+        """Build a :class:`repro.serving.engine.GenerationEngine` for this
+        actor.  The engine expects params already in the inference layout:
+        call :meth:`to_inference` once per phase and pass the result to
+        ``engine.generate`` / ``engine.serve`` — that pairing is the
+        Hybrid Engine contract (one reshard, then a serving-grade decode
+        loop under the TP layout)."""
+        from repro.serving.engine import GenerationEngine
+        return GenerationEngine(self.cfg, **gen_kwargs)
+
+    # ---------------------------------------------------------------- #
     # analytics (feed benchmarks/phase_breakdown + effective_throughput)
     # ---------------------------------------------------------------- #
     def param_bytes(self) -> int:

@@ -68,7 +68,8 @@ class RLHFPipeline:
         self.stages = stages
         self.ppo = ppo
         self.log = {"stage1": [], "stage2": [], "stage3": []}
-        self.timings = {}
+        self.timings = {}          # seconds per stage
+        self.gen_tok_s = 0.0       # mean stage-3 generation throughput
 
     # ------------------------- Step 1: SFT ------------------------- #
     def run_sft(self):
@@ -135,6 +136,11 @@ class RLHFPipeline:
             scores.append(gm["reward_score"])
             self.log["stage3"].append({**gm, **tm})
         self.timings["stage3"] = time.perf_counter() - t0
+        # serving-grade generation telemetry (engine early-exit decode);
+        # kept out of ``timings`` which holds seconds only
+        if self.log["stage3"]:
+            self.gen_tok_s = float(np.mean(
+                [m["gen_tok_s"] for m in self.log["stage3"]]))
         self.e.actor_params = trainer.actor.params
         self.trainer = trainer
         return scores

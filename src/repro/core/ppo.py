@@ -13,6 +13,7 @@ clipped value loss for the critic, EMA collection of actor weights.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Any, Optional
 
@@ -25,7 +26,7 @@ from repro.core.hybrid_engine import HybridEngine
 from repro.models import reward as R
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.serving.generate import generate
+from repro.serving.engine import GenerationEngine
 from repro.training.steps import lm_loss_fn
 from repro.training.train_state import TrainState
 
@@ -35,6 +36,8 @@ class PPOConfig:
     max_new_tokens: int = 32
     temperature: float = 1.0
     top_k: int = 0
+    eos_id: Optional[int] = None   # enables early-exit decode when set
+    decode_chunk: int = 32         # decode dispatch granularity (engine)
     kl_coef: float = 0.1
     clip_eps: float = 0.2
     value_clip: float = 0.2
@@ -144,10 +147,12 @@ class PPOTrainer:
         self.engine = engine
         self.ema = EMA.init(actor_params) if ppo.use_ema else None
 
-        self._gen = jax.jit(partial(
-            generate, actor_cfg, max_new_tokens=ppo.max_new_tokens,
-            temperature=ppo.temperature, top_k=ppo.top_k),
-            static_argnames=())
+        gen_opts = dict(max_new_tokens=ppo.max_new_tokens,
+                        temperature=ppo.temperature, top_k=ppo.top_k,
+                        eos_id=ppo.eos_id, chunk=ppo.decode_chunk)
+        self.gen_engine = (engine.generation_engine(**gen_opts)
+                           if engine is not None
+                           else GenerationEngine(actor_cfg, **gen_opts))
         self._mk_exp = jax.jit(partial(make_experience, actor_cfg,
                                        critic_cfg, ppo))
         self._actor_step = jax.jit(partial(actor_step, actor_cfg, ppo))
@@ -155,16 +160,25 @@ class PPOTrainer:
 
     # -------------------------------------------------------------- #
     def generate_experience(self, prompts, key):
-        """Inference phase (Hybrid Engine: TP layout)."""
+        """Inference phase: one Hybrid-Engine reshard to the TP layout,
+        then the serving-grade engine decodes with early exit (sequences
+        are token-identical to the fixed-scan reference path)."""
+        t0 = time.perf_counter()
         params = self.actor.params
         if self.engine is not None:
             params = self.engine.to_inference(params)
-        out = self._gen(params, prompts, key)
+        out = self.gen_engine.generate(params, prompts, key)
+        jax.block_until_ready(out["sequences"])
+        gen_s = time.perf_counter() - t0
+        n_gen = float(out["response_mask"].sum())
         exp, score = self._mk_exp(self.actor.params, self.ref_params,
                                   self.critic.params, self.reward_params,
                                   out["sequences"], out["response_mask"])
         return exp, {"reward_score": float(score.mean()),
-                     "gen_len": float(out["response_mask"].sum(1).mean())}
+                     "gen_len": float(out["response_mask"].sum(1).mean()),
+                     "gen_tok_s": n_gen / max(gen_s, 1e-9),
+                     "decode_steps": float(
+                         self.gen_engine.last_stats["decode_steps"])}
 
     def train_rlhf(self, exp: X.Experience, ptx_batch=None):
         """Training phase (ZeRO layout)."""

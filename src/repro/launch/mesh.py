@@ -20,18 +20,23 @@ ICI_BW = 50e9                # bytes/s per link
 HBM_BYTES = 16 * 2 ** 30     # per chip
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh(shape, axes):
+    # jax.sharding.AxisType only exists on newer jax; older versions
+    # default every axis to Auto anyway, so omit the kwarg there
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(at.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _mesh(shape, axes)
 
 
 def make_local_mesh(model: int = 1):
     """Mesh over whatever devices exist (CPU tests: 1 device)."""
     n = len(jax.devices())
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return _mesh((n // model, model), ("data", "model"))

@@ -1,11 +1,19 @@
 """Serving launcher — the DeepSpeed-Chat inference-API analogue.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
-        --reduced --batch 4 --max-new 32 [--ckpt out/model.npz]
+        --reduced --requests 16 --max-new 32 --scheduler continuous
 
-Runs batched prefill+decode generation with temperature/top-k sampling on
-a (reduced) model; ``--chat`` drops into a toy conversation loop using the
-byte tokenizer.
+Drives the serving-grade :class:`repro.serving.engine.GenerationEngine`:
+
+- ``--scheduler fixed``      one padded batch at a time, early-exit
+                             chunked decode (the PPO experience path)
+- ``--scheduler continuous`` slot-based continuous batching over a KV
+                             arena; freed slots are refilled from the
+                             request queue at chunk boundaries
+
+``--ragged`` draws variable prompt/response lengths so the two schedulers
+can be compared on the distribution that actually matters for serving;
+``--chat`` drops into a toy conversation loop using the byte tokenizer.
 """
 from __future__ import annotations
 
@@ -19,19 +27,73 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.data import ByteTokenizer
 from repro.models import transformer as T
-from repro.serving.generate import generate
+from repro.serving.engine import GenerationEngine, Request
 from repro.training import checkpoint
+
+
+def build_requests(args, cfg, rng) -> list:
+    reqs = []
+    for i in range(args.requests):
+        if args.ragged:
+            lp = int(rng.integers(max(2, args.prompt_len // 4),
+                                  args.prompt_len + 1))
+            mn = int(rng.integers(max(1, args.max_new // 8),
+                                  args.max_new + 1))
+        else:
+            lp, mn = args.prompt_len, args.max_new
+        toks = rng.integers(0, cfg.vocab_size, size=lp).astype(np.int32)
+        reqs.append(Request(uid=i, tokens=toks, max_new_tokens=mn))
+    return reqs
+
+
+def run_fixed(engine, params, reqs, key, batch, lp):
+    """Baseline scheduler: pad every prompt to the global max ``lp``,
+    decode all of them to the global max_new (early exit only once the
+    whole batch is done)."""
+    done_tokens = scheduled = 0
+    t0 = time.perf_counter()
+    for i in range(0, len(reqs), batch):
+        group = reqs[i:i + batch]
+        # always dispatch full batches (fixed shapes => one compile);
+        # filler rows don't count toward useful tokens
+        padded = np.zeros((batch, lp), np.int32)
+        for j, r in enumerate(group):
+            padded[j, lp - len(r.tokens):] = r.tokens      # left-align end
+        key, sub = jax.random.split(key)
+        out = engine.generate(params, jnp.asarray(padded), sub)
+        mask = np.asarray(out["response_mask"])
+        # only tokens within each request's budget count as useful work
+        done_tokens += int(sum(
+            min(int(mask[j].sum()), r.max_new_tokens)
+            for j, r in enumerate(group)))
+        scheduled += engine.last_stats["scheduled_tokens"]
+    return done_tokens, scheduled, time.perf_counter() - t0
+
+
+def run_continuous(engine, params, reqs, key, slots, S):
+    t0 = time.perf_counter()
+    outs = engine.serve(params, reqs, key, slots=slots, max_seq_len=S)
+    dt = time.perf_counter() - t0
+    return (sum(c.tokens.size for c in outs),
+            engine.last_stats["scheduled_tokens"], dt)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--scheduler", choices=["fixed", "continuous"],
+                    default="continuous")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="fixed-scheduler batch / continuous slots")
+    ap.add_argument("--ragged", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--chat", action="store_true")
@@ -48,6 +110,11 @@ def main():
 
     tok = ByteTokenizer()
     if args.chat:
+        eos = min(tok.eos_id, cfg.vocab_size - 1)
+        engine = GenerationEngine(cfg, max_new_tokens=args.max_new,
+                                  temperature=args.temperature,
+                                  top_k=args.top_k, eos_id=eos,
+                                  chunk=args.chunk)
         print("chat mode — empty line to exit")
         while True:
             try:
@@ -58,31 +125,36 @@ def main():
                 break
             ids = tok.encode(text, max_len=args.prompt_len)[None]
             ids = np.minimum(ids, cfg.vocab_size - 1)
-            out = generate(cfg, params, jnp.asarray(ids), key,
-                           max_new_tokens=args.max_new,
-                           temperature=args.temperature, top_k=args.top_k,
-                           eos_id=min(tok.eos_id, cfg.vocab_size - 1))
+            out = engine.generate(params, jnp.asarray(ids), key)
             resp = np.asarray(out["sequences"][0, args.prompt_len:])
-            print("Assistant:", tok.decode(resp))
+            n = int(out["response_mask"][0].sum())
+            print("Assistant:", tok.decode(resp[:n]))
         return
 
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    gen = jax.jit(lambda p, pr, k: generate(
-        cfg, p, pr, k, max_new_tokens=args.max_new,
-        temperature=args.temperature, top_k=args.top_k))
-    t0 = time.perf_counter()
-    out = gen(params, prompts, key)
-    jax.block_until_ready(out["sequences"])
-    compile_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    out = gen(params, prompts, jax.random.PRNGKey(args.seed + 1))
-    jax.block_until_ready(out["sequences"])
-    run_s = time.perf_counter() - t0
-    n_tok = args.batch * args.max_new
-    print(f"generated {n_tok} tokens  compile={compile_s:.1f}s  "
-          f"run={run_s:.3f}s  ({n_tok / run_s:.1f} tok/s)")
-    print("sample:", np.asarray(out['sequences'][0])[:24], "...")
+    rng = np.random.default_rng(args.seed)
+    reqs = build_requests(args, cfg, rng)
+    engine = GenerationEngine(cfg, max_new_tokens=args.max_new,
+                              temperature=args.temperature,
+                              top_k=args.top_k, eos_id=args.eos_id,
+                              chunk=args.chunk)
+    # warmup/compile on a prefix of the queue, at the measured shapes
+    lp = max(len(r.tokens) for r in reqs)
+    S = lp + args.max_new
+    warm = reqs[:min(len(reqs), args.batch)]
+    if args.scheduler == "continuous":
+        run_continuous(engine, params, warm, key, args.batch, S)
+        n_tok, scheduled, dt = run_continuous(
+            engine, params, reqs, jax.random.PRNGKey(args.seed + 1),
+            args.batch, S)
+    else:
+        run_fixed(engine, params, warm, key, args.batch, lp)
+        n_tok, scheduled, dt = run_fixed(
+            engine, params, reqs, jax.random.PRNGKey(args.seed + 1),
+            args.batch, lp)
+    util = n_tok / max(scheduled, 1)
+    print(f"scheduler={args.scheduler}  requests={len(reqs)}  "
+          f"generated {n_tok} tokens in {dt:.3f}s  ({n_tok / dt:.1f} tok/s, "
+          f"slot utilization {util:.1%})")
 
 
 if __name__ == "__main__":

@@ -28,6 +28,29 @@ from repro.models.config import ModelConfig
 NEG_INF = -1e30
 
 
+@jax.custom_vjp
+def opt_barrier(x):
+    """``lax.optimization_barrier`` with a gradient rule.
+
+    Some jax versions ship no differentiation rule for the barrier
+    primitive; training graphs differentiate through the barriered
+    weight-gather and layer-scan carries, so we define the obvious one:
+    barrier in both directions (the cotangent benefits from the same
+    no-hoisting guarantee as the primal)."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _opt_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _opt_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
+
+
 def constrain_batch(x, batch_axes):
     """Pin the leading (batch) axis of an activation to the data mesh axes.
     Without this, GSPMD propagation can replicate the batch (it prefers the
@@ -65,7 +88,7 @@ def wgather(w, cfg, axes):
     # barrier pins the f32->bf16 convert BEFORE the gather so the
     # collective moves half the bytes (XLA otherwise reorders to
     # gather-f32-then-convert)
-    w = jax.lax.optimization_barrier(w.astype(cfg.cdtype))
+    w = opt_barrier(w.astype(cfg.cdtype))
     return jax.lax.with_sharding_constraint(w, P(*entries))
 
 
@@ -363,8 +386,8 @@ def decode_attention(q, k_cache, v_cache, valid_mask, use_pallas=False):
     G = H // KV
     # barrier: stops XLA hoisting a convert(f32) of the FULL stacked
     # per-layer cache out of the layer scan (a cache-sized f32 temp)
-    k_cache = jax.lax.optimization_barrier(k_cache)
-    v_cache = jax.lax.optimization_barrier(v_cache)
+    k_cache = opt_barrier(k_cache)
+    v_cache = opt_barrier(v_cache)
     qs = q.reshape(B, KV, G, D)
     s = jnp.einsum("bkgd,bskd->bkgs", qs, k_cache,
                    preferred_element_type=jnp.float32) / np.sqrt(D)
@@ -422,8 +445,8 @@ def decode_attention_quant(q, k_i8, v_i8, k_scale, v_scale, valid_mask):
     B, H, D = q.shape
     KV = k_i8.shape[2]
     G = H // KV
-    k_i8 = jax.lax.optimization_barrier(k_i8)
-    v_i8 = jax.lax.optimization_barrier(v_i8)
+    k_i8 = opt_barrier(k_i8)
+    v_i8 = opt_barrier(v_i8)
     qs = q.reshape(B, KV, G, D)
     s = jnp.einsum("bkgd,bskd->bkgs", qs.astype(jnp.float32),
                    k_i8.astype(jnp.float32)) / np.sqrt(D)
@@ -458,8 +481,8 @@ def attn_apply(cfg: ModelConfig, p, x, *, positions, mode, cache=None,
         S = cache["k"].shape[1]
         pos = positions[:, 0]                       # (B,)
         slot = pos % S                              # ring-buffer slot
-        ck = jax.lax.optimization_barrier(cache["k"])
-        cv = jax.lax.optimization_barrier(cache["v"])
+        ck = opt_barrier(cache["k"])
+        cv = opt_barrier(cache["v"])
         if cfg.kv_quant:
             ki, ks = _kv_quant(k[:, 0])             # (B,KV,hd),(B,KV)
             vi, vs = _kv_quant(v[:, 0])

@@ -121,7 +121,7 @@ def _unit_apply(cfg: ModelConfig, unit_spec, uparams, x, positions, mode,
     # barrier: stops XLA promoting the whole stacked scan carry / cache to
     # f32 outside the loop (it hoists `convert` of loop-invariant stacks,
     # materializing layer-count-sized f32 temps)
-    x = jax.lax.optimization_barrier(x)
+    x = M.opt_barrier(x)
     aux = jnp.zeros((), jnp.float32)
     new_caches = []
     for i, spec in enumerate(unit_spec):

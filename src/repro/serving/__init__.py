@@ -1,4 +1,7 @@
-from repro.serving.generate import decode_step, generate, prefill
+from repro.serving.engine import Completion, GenerationEngine, Request
+from repro.serving.generate import (decode_scan_step, decode_step, generate,
+                                    prefill)
 from repro.serving.sampling import sample
 
-__all__ = ["decode_step", "generate", "prefill", "sample"]
+__all__ = ["Completion", "GenerationEngine", "Request", "decode_scan_step",
+           "decode_step", "generate", "prefill", "sample"]

@@ -1,0 +1,332 @@
+"""Serving-grade generation engine: early-exit decode + continuous batching.
+
+The paper's Fig. 5 point is that RLHF stage-3 *experience generation*
+dominates end-to-end time; the Hybrid Engine makes each decode step cheap
+by resharding once per phase.  This module attacks the two remaining
+sources of waste that a fixed-shape :func:`repro.serving.generate.generate`
+cannot avoid:
+
+1. **Early-exit decode** (``GenerationEngine.generate``): the decode scan
+   is chunked into ``chunk``-token segments dispatched from the host.
+   After each segment the (tiny) ``done`` vector is inspected and no
+   further segments are dispatched once every sequence has emitted EOS —
+   a batch that finishes at 40 tokens no longer pays for 256.  The token
+   stream is *bit-identical* to ``generate`` (same
+   :func:`repro.serving.generate.decode_scan_step` body, same PRNG-split
+   sequence), so PPO sees exactly the sequences the reference path would
+   have produced.
+
+2. **Continuous batching** (``GenerationEngine.serve``): a slot-based
+   scheduler admits variable-length prompts from a queue into a fixed
+   ``(slots, S)`` KV-cache arena.  Each slot carries its own absolute
+   position, stop limit and done flag; when a sequence hits EOS (or its
+   per-request ``max_new_tokens``) its slot is harvested at the next
+   chunk boundary and refilled from the queue, so the arena stays full
+   under ragged prompt/response length distributions instead of padding
+   every request to the batch maximum.
+
+Ragged prefill correctness: prompts are right-padded to a shape bucket and
+prefilled with causal attention, so real tokens never attend padding.  The
+padded KV rows beyond the true prompt length are garbage, but decode
+attention only exposes cache rows ``< pos + 1`` and the first decode steps
+overwrite exactly those rows (row ``pos`` is written before ``pos`` becomes
+visible) — the garbage is dead by construction.  Architectures with
+recurrent state (SSM / hybrid) cannot skip pad tokens this way, so for
+them admission prefills at the exact prompt length (one compile per
+distinct length instead of per bucket).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ATTN, ModelConfig
+from repro.serving.generate import decode_scan_step, decode_step, prefill
+from repro.serving.sampling import sample
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request: a variable-length prompt plus its budget."""
+    uid: int
+    tokens: np.ndarray                 # (Lp,) int32 prompt
+    max_new_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    uid: int
+    prompt: np.ndarray                 # (Lp,) int32
+    tokens: np.ndarray                 # generated tokens, EOS included
+    finished_by_eos: bool
+
+
+def _next_bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class GenerationEngine:
+    """Engine for PPO experience generation and the serve launcher.
+
+    Sampling config is fixed at construction (it is baked into the jitted
+    decode graphs); params are passed per call so the Hybrid Engine can
+    hand in freshly resharded actor weights every PPO iteration.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, max_new_tokens: int,
+                 temperature: float = 1.0, top_k: int = 0,
+                 eos_id: Optional[int] = None, chunk: int = 32):
+        self.cfg = cfg
+        self.max_new_tokens = int(max_new_tokens)
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.eos_id = eos_id
+        self.chunk = max(1, int(chunk))
+        # exact-length prefill for layers with recurrent state (see module
+        # docstring); pure-attention stacks can use shape buckets
+        self._exact_prefill = any(
+            ls.kind != ATTN for seg in cfg.segments() for ls in seg.unit_spec)
+        self.last_stats: dict = {}
+
+        self._prefill_fixed = jax.jit(self._prefill_fixed_impl)
+        self._chunk_fns: dict = {}        # n_steps -> jitted fixed chunk
+        # donate the arena + per-slot state: every caller rebinds them from
+        # the return value, and without donation each dispatch memcpys the
+        # whole KV arena (args: params, tokens, length, max_new, slot,
+        # arena, logits, pos, done, limit)
+        self._admit_fn = jax.jit(self._admit_impl,
+                                 donate_argnums=(5, 6, 7, 8, 9))
+        # (params, logits, arena, key, pos, done, limit) — limit is NOT
+        # donated: it is reused across chunks until the next admit
+        self._serve_chunk_fn = jax.jit(self._serve_chunk_impl,
+                                       donate_argnums=(1, 2, 4, 5))
+
+    # ================================================================ #
+    # fixed-batch path with early exit (PPO experience generation)
+    # ================================================================ #
+    def _prefill_fixed_impl(self, params, tokens, encoder_embeds):
+        B, Lp = tokens.shape
+        cache = T.init_cache(self.cfg, B, Lp + self.max_new_tokens)
+        logits, cache = prefill(self.cfg, params, tokens, cache,
+                                encoder_embeds=encoder_embeds)
+        return logits, cache
+
+    def _fixed_chunk(self, n: int):
+        if n not in self._chunk_fns:
+            def fn(params, logits, cache, key, pos, done, encoder_embeds):
+                step = decode_scan_step(
+                    self.cfg, params, temperature=self.temperature,
+                    top_k=self.top_k, eos_id=self.eos_id,
+                    encoder_embeds=encoder_embeds)
+                carry, (toks, was) = jax.lax.scan(
+                    step, (logits, cache, key, pos, done), None, length=n)
+                return carry, toks, was
+            # donate the whole carry (rebound every dispatch) so chunked
+            # decode never memcpys the KV cache between chunks
+            self._chunk_fns[n] = jax.jit(fn, donate_argnums=(1, 2, 3, 4, 5))
+        return self._chunk_fns[n]
+
+    def generate(self, params, tokens, key, *, encoder_embeds=None):
+        """Drop-in for :func:`repro.serving.generate.generate` minus the
+        returned cache: same ``sequences`` / ``response_mask`` contract,
+        token-identical output, but decode stops dispatching once every
+        sequence has emitted EOS.  ``self.last_stats`` records how many
+        decode steps actually ran."""
+        B, Lp = tokens.shape
+        max_new = self.max_new_tokens
+        if max_new == 0:
+            self.last_stats = {"decode_steps": 0, "scheduled_tokens": 0,
+                               "generated_tokens": 0}
+            return {"sequences": tokens,
+                    "response_mask": jnp.zeros((B, Lp), bool)}
+        logits, cache = self._prefill_fixed(params, tokens, encoder_embeds)
+        pos = jnp.full((B,), Lp, jnp.int32)
+        done = jnp.zeros((B,), bool)
+        # the chunk fns donate their whole carry; copy the caller's key so
+        # donation never invalidates an array the caller still owns
+        key = jnp.array(key, copy=True)
+
+        # without an EOS there is nothing to exit early on — one fused
+        # dispatch, no per-chunk host sync (the PPO default)
+        chunk = self.chunk if self.eos_id is not None else max_new
+        tok_parts, was_parts, steps = [], [], 0
+        while steps < max_new:
+            n = min(chunk, max_new - steps)
+            fn = self._fixed_chunk(n)
+            (logits, cache, key, pos, done), toks, was = fn(
+                params, logits, cache, key, pos, done, encoder_embeds)
+            tok_parts.append(np.asarray(toks))
+            was_parts.append(np.asarray(was))
+            steps += n
+            if (self.eos_id is not None and steps < max_new
+                    and bool(np.asarray(done).all())):
+                break
+
+        gen = np.concatenate(tok_parts, axis=0).T          # (B, steps)
+        was_done = np.concatenate(was_parts, axis=0).T
+        if steps < max_new:                                # early exit: pad
+            pad = max_new - steps
+            gen = np.concatenate(
+                [gen, np.full((B, pad), self.eos_id, gen.dtype)], axis=1)
+            was_done = np.concatenate(
+                [was_done, np.ones((B, pad), bool)], axis=1)
+        sequences = np.concatenate([np.asarray(tokens), gen], axis=1)
+        mask = np.concatenate(
+            [np.zeros((B, Lp), bool), ~was_done], axis=1)
+        self.last_stats = {
+            "decode_steps": steps,
+            "scheduled_tokens": B * steps,
+            "generated_tokens": int(mask.sum()),
+        }
+        return {"sequences": jnp.asarray(sequences),
+                "response_mask": jnp.asarray(mask)}
+
+    # ================================================================ #
+    # continuous batching over a slot arena
+    # ================================================================ #
+    def _admit_impl(self, params, tokens, length, max_new, slot,
+                    arena, logits_buf, pos, done, limit):
+        """Prefill one padded prompt into a fresh single-row cache and
+        scatter it into arena slot ``slot``; reset the slot's decode
+        state.  ``length`` is the true (unpadded) prompt length."""
+        cfg = self.cfg
+        # single-row cache with the arena's own (S, dtype) geometry
+        row = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((a.shape[0], 1) + a.shape[2:], a.dtype),
+            arena)
+        hidden, row, _ = T.forward(cfg, params, tokens=tokens,
+                                   mode="prefill", cache=row)
+        h_last = hidden[0, length - 1]                     # true last token
+        logit = T.logits_fn(cfg, params, h_last[None, None])[0, 0]
+        arena = jax.tree_util.tree_map(
+            lambda a, r: a.at[:, slot].set(r[:, 0]), arena, row)
+        return (arena,
+                logits_buf.at[slot].set(logit),
+                pos.at[slot].set(length),
+                done.at[slot].set(False),
+                limit.at[slot].set(length + max_new))
+
+    def _serve_chunk_impl(self, params, logits, arena, key, pos, done,
+                          limit):
+        """``chunk`` decode steps over the whole arena.  Same body as
+        :func:`decode_scan_step` plus the per-slot stop limit (absolute
+        position ``prompt_len + max_new_tokens``)."""
+        cfg = self.cfg
+        pad_tok = self.eos_id if self.eos_id is not None else 0
+
+        def step(carry, _):
+            logits, cache, key, pos, done = carry
+            key, sub = jax.random.split(key)
+            tok = sample(logits, sub, temperature=self.temperature,
+                         top_k=self.top_k)
+            tok = jnp.where(done, pad_tok, tok)
+            logits, cache = decode_step(cfg, params, tok, cache, pos)
+            new_done = done | (pos + 1 >= limit)
+            if self.eos_id is not None:
+                new_done = new_done | (tok == self.eos_id)
+            return (logits, cache, key, pos + 1, new_done), (tok, done)
+
+        carry, (toks, was) = jax.lax.scan(
+            step, (logits, arena, key, pos, done), None, length=self.chunk)
+        return carry, toks, was
+
+    def serve(self, params, requests: Sequence[Request], key, *,
+              slots: int = 8, max_seq_len: Optional[int] = None
+              ) -> List[Completion]:
+        """Run a queue of ragged requests through a ``slots``-wide arena.
+
+        Free slots are refilled at chunk boundaries, so each admitted
+        sequence decodes alongside whatever else is in flight — the
+        continuous-batching scheduler of vLLM/OpenRLHF at chunk
+        granularity.  Per-sequence outputs are independent of batch
+        composition (each slot attends only its own cache row), so greedy
+        results are identical to running each request alone.
+        """
+        cfg = self.cfg
+        if cfg.arch_type == "vlm" or not cfg.embed_inputs:
+            raise NotImplementedError(
+                "continuous batching supports token-input decoder LMs")
+        queue = deque(requests)
+        need = max((len(r.tokens) + r.max_new_tokens for r in requests),
+                   default=1)
+        S = max_seq_len or need
+        if need > S:
+            raise ValueError(f"max_seq_len={S} < longest request ({need})")
+
+        arena = T.init_cache(cfg, slots, S)
+        key = jnp.array(key, copy=True)    # chunk fns donate the key
+        logits = jnp.zeros((slots, cfg.vocab_size), jnp.float32)
+        pos = jnp.zeros((slots,), jnp.int32)
+        done = jnp.ones((slots,), bool)
+        limit = jnp.zeros((slots,), jnp.int32)
+        slot_req: List[Optional[Request]] = [None] * slots
+        slot_toks: List[List[int]] = [[] for _ in range(slots)]
+        out: List[Completion] = []
+        admitted = chunks = 0
+
+        while queue or any(r is not None for r in slot_req):
+            for b in range(slots):
+                if slot_req[b] is None and queue:
+                    r = None
+                    while queue:                 # zero-budget: trivially done
+                        cand = queue.popleft()
+                        if cand.max_new_tokens > 0:
+                            r = cand
+                            break
+                        out.append(Completion(
+                            uid=cand.uid, prompt=np.asarray(cand.tokens),
+                            tokens=np.zeros((0,), np.int32),
+                            finished_by_eos=False))
+                    if r is None:
+                        continue
+                    Lp = len(r.tokens)
+                    Lb = Lp if self._exact_prefill else min(
+                        _next_bucket(Lp), S)
+                    padded = np.zeros((1, Lb), np.int32)
+                    padded[0, :Lp] = np.asarray(r.tokens, np.int32)
+                    arena, logits, pos, done, limit = self._admit_fn(
+                        params, jnp.asarray(padded),
+                        jnp.int32(Lp), jnp.int32(r.max_new_tokens),
+                        jnp.int32(b), arena, logits, pos, done, limit)
+                    slot_req[b], slot_toks[b] = r, []
+                    admitted += 1
+            if not any(r is not None for r in slot_req):
+                break                            # queue drained, all idle
+            (logits, arena, key, pos, done), toks, was = \
+                self._serve_chunk_fn(params, logits, arena, key, pos, done,
+                                     limit)
+            chunks += 1
+            toks_h, was_h = np.asarray(toks), np.asarray(was)
+            done_h = np.asarray(done)
+            for b in range(slots):
+                if slot_req[b] is None:
+                    continue
+                slot_toks[b].extend(toks_h[~was_h[:, b], b].tolist())
+                if done_h[b]:
+                    r = slot_req[b]
+                    gen = np.asarray(slot_toks[b], np.int32)
+                    by_eos = (self.eos_id is not None and gen.size > 0
+                              and int(gen[-1]) == self.eos_id
+                              and gen.size < r.max_new_tokens)
+                    out.append(Completion(uid=r.uid,
+                                          prompt=np.asarray(r.tokens),
+                                          tokens=gen,
+                                          finished_by_eos=by_eos))
+                    slot_req[b] = None
+        self.last_stats = {
+            "requests": len(out),
+            "admitted": admitted,
+            "decode_steps": chunks * self.chunk,
+            "scheduled_tokens": chunks * self.chunk * slots,
+            "generated_tokens": int(sum(c.tokens.size for c in out)),
+        }
+        return out

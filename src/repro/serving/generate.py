@@ -7,7 +7,15 @@ token per sequence.  The Hybrid Engine runs this function under the TP
 
 Prompts are fixed-length per batch (the paper's own benchmark recipe:
 256 prompt + 256 generated tokens); the cache is preallocated to
-``prompt_len + max_new_tokens`` (or the sliding window, if smaller).
+``prompt_len + max_new_tokens`` (the attention layer internally clamps it
+to the sliding window and ring-buffers writes when one is configured).
+
+``generate`` always scans the full ``max_new_tokens`` — after every
+sequence has emitted EOS the remaining steps still run, forcing EOS out
+of the sampler.  The serving-grade path with early-exit chunked decode
+and continuous batching lives in :mod:`repro.serving.engine`; it reuses
+:func:`decode_scan_step` so its token stream is bit-identical to this
+reference implementation.
 """
 from __future__ import annotations
 
@@ -49,21 +57,18 @@ def decode_step(cfg: ModelConfig, params, token, cache, position, *,
     return logits, cache
 
 
-def generate(cfg: ModelConfig, params, tokens, key, *, max_new_tokens: int,
-             temperature: float = 1.0, top_k: int = 0,
-             eos_id: Optional[int] = None, encoder_embeds=None):
-    """tokens: (B, Lp) fixed-length prompts.  Returns dict with
-    ``sequences`` (B, Lp + max_new), ``response_mask`` (B, Lp + max_new)
-    marking generated (pre-EOS) tokens."""
-    B, Lp = tokens.shape
-    total = Lp + max_new_tokens
-    S = total if cfg.sliding_window is None else min(
-        total, cfg.sliding_window)
-    del S  # cache sizing handled by init_cache via cfg window
-    cache = T.init_cache(cfg, B, total)
-    logits, cache = prefill(cfg, params, tokens, cache,
-                            encoder_embeds=encoder_embeds)
+def decode_scan_step(cfg: ModelConfig, params, *, temperature: float,
+                     top_k: int, eos_id: Optional[int],
+                     encoder_embeds=None):
+    """Build the ``lax.scan`` body shared by :func:`generate` and the
+    chunked engine decode.
 
+    Carry is ``(logits, cache, key, pos, done)``; the per-step output is
+    ``(tok, was_done)`` where ``was_done`` is the *pre-step* done flag:
+    the step that emits the first EOS still records ``was_done=False``
+    (the EOS token itself counts as generated), every later step forces
+    ``eos_id`` out of the sampler with ``was_done=True``.
+    """
     def step(carry, _):
         logits, cache, key, pos, done = carry
         key, sub = jax.random.split(key)
@@ -74,7 +79,38 @@ def generate(cfg: ModelConfig, params, tokens, key, *, max_new_tokens: int,
                                     encoder_embeds=encoder_embeds)
         new_done = done | (tok == eos_id) if eos_id is not None else done
         return (logits, cache, key, pos + 1, new_done), (tok, done)
+    return step
 
+
+def generate(cfg: ModelConfig, params, tokens, key, *, max_new_tokens: int,
+             temperature: float = 1.0, top_k: int = 0,
+             eos_id: Optional[int] = None, encoder_embeds=None):
+    """tokens: (B, Lp) fixed-length prompts.
+
+    Returns a dict with:
+
+    - ``sequences`` (B, Lp + max_new): prompt followed by generated
+      tokens; once a sequence emits ``eos_id`` every later position holds
+      ``eos_id`` (the sampler is bypassed for finished rows).
+    - ``response_mask`` (B, Lp + max_new) bool: True exactly on generated
+      tokens *up to and including* the first EOS; False on all prompt
+      positions and on the forced-EOS padding after a sequence finishes.
+      (PPO losses therefore credit the EOS emission but never the
+      padding.)
+    - ``cache``: the filled KV cache (position ``Lp + max_new``).
+
+    With ``eos_id=None`` no sequence ever finishes and the mask is True
+    on the whole response region.
+    """
+    B, Lp = tokens.shape
+    total = Lp + max_new_tokens
+    cache = T.init_cache(cfg, B, total)
+    logits, cache = prefill(cfg, params, tokens, cache,
+                            encoder_embeds=encoder_embeds)
+
+    step = decode_scan_step(cfg, params, temperature=temperature,
+                            top_k=top_k, eos_id=eos_id,
+                            encoder_embeds=encoder_embeds)
     pos0 = jnp.full((B,), Lp, jnp.int32)
     done0 = jnp.zeros((B,), bool)
     (_, cache, _, _, _), (toks, was_done) = jax.lax.scan(

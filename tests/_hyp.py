@@ -1,0 +1,75 @@
+"""Optional-import shim for ``hypothesis``.
+
+Tier-1 must collect and run on a bare ``jax + numpy + pytest`` image, but
+several suites were written as hypothesis property tests.  When hypothesis
+is installed we re-export it unchanged (full shrinking etc.); when it is
+missing we fall back to a tiny deterministic sampler: each ``@given`` test
+runs ``max_examples`` seeded draws from the declared strategies.  Only the
+strategy surface these tests use is implemented (``integers``, ``floats``,
+``lists``).
+
+Usage (in test modules)::
+
+    from _hyp import given, settings, st
+"""
+from __future__ import annotations
+
+import types
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import numpy as np
+
+    class _Strategy:
+        """A strategy is just a seeded-rng -> value sampler."""
+
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(lo, hi):
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    def _floats(lo, hi):
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+    def _lists(elem, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elem.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    st = types.SimpleNamespace(integers=_integers, floats=_floats,
+                               lists=_lists)
+
+    def settings(max_examples: int = 10, deadline=None, **_kw):
+        """Records ``max_examples`` for the fallback ``given`` runner."""
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco
+
+    def given(*strategies):
+        """Run the test over ``max_examples`` deterministic draws.
+
+        Decorator order in the test files is ``@given`` above ``@settings``,
+        so by the time ``given`` sees the function, ``settings`` has already
+        stamped ``_max_examples`` on it.
+        """
+        def deco(f):
+            n = getattr(f, "_max_examples", 10)
+
+            def wrapper():
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(n):
+                    f(*(s.draw(rng) for s in strategies))
+            # plain attribute copy, NOT functools.wraps: wraps would expose
+            # the wrapped signature and pytest would hunt for fixtures
+            # named after the strategy-drawn parameters
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco

@@ -1,7 +1,7 @@
 """Data layer: blending proportions, stage-split disjointness (hypothesis),
 batch contracts, oracle learnability, tokenizer roundtrip."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data import (ByteTokenizer, ConstantTaskDataset, CopyTaskDataset,
                         DataBlender, SortTaskDataset, stage_split)

@@ -3,7 +3,7 @@ behaviour, EMA convexity, LoRA adapter isolation."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import ema as EMA
 from repro.core import experience as X
