@@ -11,8 +11,19 @@ split-KV decode kernels).  The G query heads of a KV group ride along in
 one (G, D) tile so each K/V byte loaded serves all G heads (GQA's whole
 point — it multiplies effective bandwidth by G).
 
-Layout: q: (B, KV, G, D); k/v cache: (B, KV, S, D); valid: (B, S) bool
-(ring-buffer validity — RoPE is pre-applied so slot order is free).
+Layout — this kernel consumes the **dense** cache layout: each sequence
+owns a contiguous per-slot slab, q: (B, KV, G, D); k/v cache:
+(B, KV, S, D); valid: (B, S) bool (ring-buffer validity — RoPE is
+pre-applied so slot order is free).  It serves ``generate()`` /
+fixed-batch PPO decode, the dense continuous scheduler
+(``kv_layout="dense"``), and sliding-window / ring-buffer caches, which
+are inherently contiguous.  The **paged** serving layout — a shared
+block pool indexed through per-slot block tables, selected by
+``kv_layout="paged"`` in :class:`repro.serving.engine.GenerationEngine`
+— is served by the sibling kernel in
+:mod:`repro.kernels.paged_attention`, which reuses this online-softmax
+scheme but walks the block table (via scalar prefetch) as its
+sequential grid axis instead of a contiguous S axis.
 """
 from __future__ import annotations
 

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import flash_attention_bwd as _fab
+from repro.kernels import paged_attention as _paged
 from repro.kernels import rmsnorm as _rms
 from repro.kernels import ssd_scan as _ssd
 
@@ -52,6 +53,20 @@ def decode_attention(q, k_cache, v_cache, valid):
     sb = _pick_block(S, 512)
     o = _dec.decode_attention_fwd(q4, k4, v4, valid, s_block=sb,
                                   interpret=_interpret())
+    return o.reshape(B, H, D)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lens):
+    """q: (B, H, D); pools: (nblocks, bs, KV, D) — the model-side paged
+    cache layout, consumed without a transpose (the kernel's BlockSpec
+    slices one (bs, D) tile per KV head straight out of the pool);
+    block_tables: (B, nb) int32; lens: (B,) int32 valid-row counts."""
+    B, H, D = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    q4 = q.reshape(B, KV, G, D)
+    o = _paged.paged_decode_attention_fwd(q4, k_pool, v_pool, block_tables,
+                                          lens, interpret=_interpret())
     return o.reshape(B, H, D)
 
 

@@ -1,0 +1,124 @@
+"""Pallas TPU paged flash-decode: single-token GQA attention over a
+block-pooled KV cache.
+
+The dense flash-decode kernel (:mod:`repro.kernels.decode_attention`)
+streams a per-sequence ``(S, D)`` cache slab; its HBM footprint is
+``slots * max_seq_len`` rows whether or not a sequence uses them.  Here
+the cache lives in a shared pool of fixed ``block_size``-token blocks
+and each sequence owns only the blocks its tokens occupy; the kernel
+walks the sequence's *block table* as the sequential grid axis.
+
+Tiling: grid = (B, KV, nb) with the block axis sequential and the same
+online-softmax scratch carry as the dense kernel.  The G query heads of
+a KV group ride along in one (G, D) tile so every K/V byte loaded still
+serves all G heads — paging must not give up GQA's bandwidth
+amplification, which is the whole point of the decode kernel.
+
+Block indirection uses **scalar prefetch**: the block table and
+per-sequence lengths arrive as scalar-prefetch operands, so the
+``index_map`` of the K/V pool can compute the DMA source block
+(``table[b, ib]``) before the kernel body runs — the TPU analogue of
+vLLM's PagedAttention gather.
+
+Layout: q: (B, KV, G, D); k/v pool: (nblocks, bs, KV, D) — the pool's
+row layout matches the model-side cache convention ``(slot, S, KV, D)``
+with ``(slot, S)`` replaced by ``(block, offset)``; block_tables:
+(B, nb) int32 (entries past a sequence's allocated prefix point at the
+trash block 0); lens: (B,) int32 = number of valid rows (``pos + 1``).
+RoPE is pre-applied to cached keys, so block order is free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, bs, nb):
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n_valid = lens_ref[b]
+
+    # blocks wholly past the sequence length contribute nothing: skip the
+    # dot-products (their table entries point at the trash block anyway)
+    @pl.when(ib * bs < n_valid)
+    def _accumulate():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)       # (bs, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        G, D = q.shape
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / np.sqrt(D))                   # (G, bs)
+        rows = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        s = jnp.where(rows < n_valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ib == nb - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_fwd(q, k_pool, v_pool, block_tables, lens, *,
+                               interpret=False):
+    """q: (B, KV, G, D); k/v pool: (nblocks, bs, KV, D);
+    block_tables: (B, nb) int32; lens: (B,) int32."""
+    B, KV, G, D = q.shape
+    nblocks, bs = k_pool.shape[0], k_pool.shape[1]
+    nb = block_tables.shape[1]
+    grid = (B, KV, nb)
+
+    def q_map(b, h, ib, tbl, lens):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, ib, tbl, lens):
+        return (tbl[b, ib], 0, h, 0)
+
+    kernel = functools.partial(_kernel, bs=bs, nb=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), q_map),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lens.astype(jnp.int32),
+      q, k_pool, v_pool)

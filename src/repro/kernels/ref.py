@@ -38,6 +38,22 @@ def decode_attention_ref(q, k_cache, v_cache, valid):
     return o.astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lens):
+    """q: (B, KV, G, D); pools: (nblocks, bs, KV, D); block_tables:
+    (B, nb) int32; lens: (B,) int32.  Gathers each sequence's blocks
+    into a dense virtual cache and reuses the dense decode oracle."""
+    B = q.shape[0]
+    nb, bs = block_tables.shape[1], k_pool.shape[1]
+    kv = k_pool[block_tables]                     # (B, nb, bs, KV, D)
+    vv = v_pool[block_tables]
+    S = nb * bs
+    k_virt = kv.reshape(B, S, *k_pool.shape[2:])
+    v_virt = vv.reshape(B, S, *v_pool.shape[2:])
+    valid = jnp.arange(S)[None, :] < lens[:, None]
+    return decode_attention_ref(q, jnp.moveaxis(k_virt, 1, 2),
+                                jnp.moveaxis(v_virt, 1, 2), valid)
+
+
 def rmsnorm_ref(x, w, eps=1e-5):
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)

@@ -1,19 +1,29 @@
 """Serving launcher — the DeepSpeed-Chat inference-API analogue.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
-        --reduced --requests 16 --max-new 32 --scheduler continuous
+        --reduced --requests 16 --max-new 32 --scheduler continuous \
+        --kv-layout paged --block-size 16
 
 Drives the serving-grade :class:`repro.serving.engine.GenerationEngine`:
 
 - ``--scheduler fixed``      one padded batch at a time, early-exit
                              chunked decode (the PPO experience path)
-- ``--scheduler continuous`` slot-based continuous batching over a KV
-                             arena; freed slots are refilled from the
-                             request queue at chunk boundaries
+- ``--scheduler continuous`` slot-based continuous batching; freed slots
+                             are refilled from the request queue at
+                             chunk boundaries
+- ``--kv-layout dense``      fixed ``(slots, S)`` KV arena (the
+                             token-identity reference)
+- ``--kv-layout paged``      block-pooled KV cache with per-slot block
+                             tables (vLLM-style PagedAttention);
+                             ``--block-size`` sets tokens per block,
+                             ``--num-blocks`` caps the pool (default:
+                             dense-arena parity) and ``--watermark``
+                             sets the free-block admission reserve
 
-``--ragged`` draws variable prompt/response lengths so the two schedulers
+``--ragged`` draws variable prompt/response lengths so the schedulers
 can be compared on the distribution that actually matters for serving;
 ``--chat`` drops into a toy conversation loop using the byte tokenizer.
+See ``docs/serving.md`` for the full tuning guide.
 """
 from __future__ import annotations
 
@@ -70,9 +80,13 @@ def run_fixed(engine, params, reqs, key, batch, lp):
     return done_tokens, scheduled, time.perf_counter() - t0
 
 
-def run_continuous(engine, params, reqs, key, slots, S):
+def run_continuous(engine, params, reqs, key, slots, S, *,
+                   num_blocks=None, watermark=None):
     t0 = time.perf_counter()
-    outs = engine.serve(params, reqs, key, slots=slots, max_seq_len=S)
+    kw = {}
+    if engine.kv_layout == "paged":
+        kw = dict(num_blocks=num_blocks, watermark=watermark)
+    outs = engine.serve(params, reqs, key, slots=slots, max_seq_len=S, **kw)
     dt = time.perf_counter() - t0
     return (sum(c.tokens.size for c in outs),
             engine.last_stats["scheduled_tokens"], dt)
@@ -91,6 +105,19 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--kv-layout", choices=["dense", "paged"],
+                    default="dense",
+                    help="continuous-scheduler KV layout: fixed arena or "
+                         "block-pooled paged cache")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged: tokens per KV block")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged: pool size in blocks incl. the trash "
+                         "block (default: dense-arena parity)")
+    ap.add_argument("--watermark", type=int, default=None,
+                    help="paged: free blocks reserved at admission "
+                         "(default: dynamic, one chunk of appends per "
+                         "running slot)")
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-k", type=int, default=40)
     ap.add_argument("--eos-id", type=int, default=None)
@@ -98,6 +125,13 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--chat", action="store_true")
     args = ap.parse_args()
+    if args.kv_layout != "dense" and (args.scheduler == "fixed"
+                                      or args.chat):
+        ap.error("--kv-layout paged requires --scheduler continuous "
+                 "(the fixed/chat path decodes a dense batch cache)")
+    if args.kv_layout == "dense" and (args.num_blocks is not None
+                                      or args.watermark is not None):
+        ap.error("--num-blocks/--watermark require --kv-layout paged")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -136,25 +170,35 @@ def main():
     engine = GenerationEngine(cfg, max_new_tokens=args.max_new,
                               temperature=args.temperature,
                               top_k=args.top_k, eos_id=args.eos_id,
-                              chunk=args.chunk)
+                              chunk=args.chunk, kv_layout=args.kv_layout,
+                              block_size=args.block_size)
     # warmup/compile on a prefix of the queue, at the measured shapes
     lp = max(len(r.tokens) for r in reqs)
     S = lp + args.max_new
     warm = reqs[:min(len(reqs), args.batch)]
+    pool_kw = dict(num_blocks=args.num_blocks, watermark=args.watermark)
     if args.scheduler == "continuous":
-        run_continuous(engine, params, warm, key, args.batch, S)
+        run_continuous(engine, params, warm, key, args.batch, S, **pool_kw)
         n_tok, scheduled, dt = run_continuous(
             engine, params, reqs, jax.random.PRNGKey(args.seed + 1),
-            args.batch, S)
+            args.batch, S, **pool_kw)
     else:
         run_fixed(engine, params, warm, key, args.batch, lp)
         n_tok, scheduled, dt = run_fixed(
             engine, params, reqs, jax.random.PRNGKey(args.seed + 1),
             args.batch, lp)
     util = n_tok / max(scheduled, 1)
-    print(f"scheduler={args.scheduler}  requests={len(reqs)}  "
+    extra = ""
+    if args.scheduler == "continuous" and args.kv_layout == "paged":
+        st = engine.last_stats
+        extra = (f"  [paged: blocks={st['num_blocks']} "
+                 f"hwm={st['block_high_water']} "
+                 f"preempt={st['preemptions']} "
+                 f"mean_conc={st['mean_concurrency']:.1f}]")
+    print(f"scheduler={args.scheduler}  kv={args.kv_layout}  "
+          f"requests={len(reqs)}  "
           f"generated {n_tok} tokens in {dt:.3f}s  ({n_tok / dt:.1f} tok/s, "
-          f"slot utilization {util:.1%})")
+          f"slot utilization {util:.1%}){extra}")
 
 
 if __name__ == "__main__":

@@ -426,6 +426,43 @@ def attn_cache_shape(cfg: ModelConfig, batch: int, max_len: int,
     return out
 
 
+def paged_attn_cache_shape(cfg: ModelConfig, num_blocks: int,
+                           block_size: int):
+    """Paged layout: a shared pool of ``num_blocks`` fixed-size KV blocks
+    (block 0 reserved as the trash block) instead of a per-slot
+    ``(batch, S)`` arena.  Row layout inside a block matches the dense
+    arena's ``(S, KV, D)`` convention with ``S -> block_size``.  Only
+    plain GQA attention is paged (no MLA / int8-KV / sliding-window)."""
+    assert not (cfg.mla or cfg.kv_quant), "paged KV: plain GQA only"
+    return dict(k=(num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim),
+                v=(num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim))
+
+
+def decode_attention_paged(q, k_pool, v_pool, block_tables, lens,
+                           use_pallas=False):
+    """Single-token attention over a block-pooled KV cache.
+
+    q: (B, H, D); k/v pool: (nblocks, bs, KV, D); block_tables: (B, nb)
+    int32 (entries past a sequence's allocated prefix point at trash
+    block 0); lens: (B,) valid-row counts.  The jnp path gathers each
+    sequence's blocks into a dense (B, nb*bs, KV, D) virtual cache and
+    reuses the dense decode math — bit-identical to the dense arena when
+    ``nb*bs`` equals the arena length; the Pallas path walks the block
+    table directly (no gather materialization)."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                           lens)
+    B = q.shape[0]
+    nb, bs = block_tables.shape[1], k_pool.shape[1]
+    k_pool = opt_barrier(k_pool)
+    v_pool = opt_barrier(v_pool)
+    k_virt = k_pool[block_tables].reshape(B, nb * bs, *k_pool.shape[2:])
+    v_virt = v_pool[block_tables].reshape(B, nb * bs, *v_pool.shape[2:])
+    valid = jnp.arange(nb * bs)[None, :] < lens[:, None]
+    return decode_attention(q, k_virt, v_virt, valid)
+
+
 def _kv_quant(x):
     """absmax int8 quantization over the head dim.
     x: (..., hd) -> (int8 (..., hd), f32 scale (...,))."""
@@ -459,9 +496,14 @@ def decode_attention_quant(q, k_i8, v_i8, k_scale, v_scale, valid_mask):
 
 
 def attn_apply(cfg: ModelConfig, p, x, *, positions, mode, cache=None,
-               window=None):
+               window=None, block_tables=None):
     """mode: 'full' (train / full prefill) | 'prefill' (also fills cache) |
-    'decode' (x is (B,1,D), cache holds history)."""
+    'decode' (x is (B,1,D), cache holds history).
+
+    ``block_tables`` selects the **paged** decode path: ``cache`` is then
+    the shared block pool (see :func:`paged_attn_cache_shape`) and each
+    row's KV is read/written through its block table instead of a dense
+    arena row."""
     B = x.shape[0]
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = (x @ wgather(p["wq"], cfg, ("embed", "heads"))).reshape(B, -1, H, hd)
@@ -476,7 +518,32 @@ def attn_apply(cfg: ModelConfig, p, x, *, positions, mode, cache=None,
     k = apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if mode == "decode":
+    if mode == "decode" and block_tables is not None:
+        # paged: write the new KV row at (table[pos // bs], pos % bs) and
+        # attend through the block table.  Rows past a slot's allocated
+        # prefix resolve to the trash block (table padding = 0); with a
+        # FULLY allocated table the clamped index instead wraps post-EOS
+        # writes into the slot's own last block — also dead, because a
+        # finished slot's output is masked until harvest and its blocks
+        # are re-scattered before reuse (no prefix reuse of harvested
+        # blocks).
+        assert cache is not None
+        assert not cfg.kv_quant and window is None, \
+            "paged KV supports plain full-context GQA only"
+        bs = cache["k"].shape[1]
+        nb = block_tables.shape[1]
+        pos = positions[:, 0]                       # (B,)
+        bi = jnp.minimum(pos // bs, nb - 1)
+        blk = jnp.take_along_axis(block_tables, bi[:, None], axis=1)[:, 0]
+        off = pos % bs
+        k_pool = opt_barrier(cache["k"]).at[blk, off].set(k[:, 0])
+        v_pool = opt_barrier(cache["v"]).at[blk, off].set(v[:, 0])
+        lens = jnp.minimum(pos + 1, nb * bs)
+        o = decode_attention_paged(q[:, 0], k_pool, v_pool, block_tables,
+                                   lens, use_pallas=cfg.use_pallas)
+        new_cache = dict(k=k_pool, v=v_pool)
+        o = o[:, None]                              # (B,1,H,hd)
+    elif mode == "decode":
         assert cache is not None
         S = cache["k"].shape[1]
         pos = positions[:, 0]                       # (B,)
@@ -585,11 +652,12 @@ def _mla_qkv(cfg, p, x, positions):
 
 
 def mla_apply(cfg: ModelConfig, p, x, *, positions, mode, cache=None,
-              window=None):
+              window=None, block_tables=None):
     """MLA.  Prefill/train: expand compressed KV and run flash attention.
     Decode: *absorbed* form — scores and values computed directly against
     the compressed cache (W_UK folded into q, W_UV applied after), so the
     per-token cost is O(L·(r+dr)) instead of O(L·H·(dn+dr))."""
+    assert block_tables is None, "paged KV does not support MLA"
     B = x.shape[0]
     H = cfg.n_heads
     r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_head_dim,

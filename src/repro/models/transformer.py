@@ -113,11 +113,42 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
                                                             max_len))
 
 
+def paged_cache_struct(cfg: ModelConfig, num_blocks: int, block_size: int):
+    """ShapeDtypeStructs of the **paged** cache pytree: each attention
+    layer holds a shared ``(num_blocks, block_size, KV, D)`` block pool
+    instead of a per-slot arena (block 0 is the reserved trash block;
+    see :mod:`repro.serving.block_pool`).  The per-slot *block tables*
+    are not part of this tree — they are layer-invariant and threaded
+    through :func:`forward` as a side input.  Attention-only configs
+    (no MLA / SSM / cross / int8-KV / sliding-window) — the serving
+    engine validates this before choosing the paged layout."""
+    segs = []
+    for seg in cfg.segments():
+        unit = []
+        for ls in seg.unit_spec:
+            if ls.kind != ATTN or ls.sliding_window or cfg.sliding_window:
+                raise NotImplementedError(
+                    "paged KV cache supports full-context attention "
+                    f"layers only (got {ls})")
+            shapes = M.paged_attn_cache_shape(cfg, num_blocks, block_size)
+            unit.append({k: jax.ShapeDtypeStruct(
+                (seg.n_units,) + shp, _cache_dtype(cfg, k))
+                for k, shp in shapes.items()})
+        segs.append(tuple(unit))
+    return tuple(segs)
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        paged_cache_struct(cfg, num_blocks, block_size))
+
+
 # ===================================================================== #
 # Forward
 # ===================================================================== #
 def _unit_apply(cfg: ModelConfig, unit_spec, uparams, x, positions, mode,
-                ucache, enc):
+                ucache, enc, block_tables=None):
     # barrier: stops XLA promoting the whole stacked scan carry / cache to
     # f32 outside the loop (it hoists `convert` of loop-invariant stacks,
     # materializing layer-count-sized f32 temps)
@@ -132,7 +163,7 @@ def _unit_apply(cfg: ModelConfig, unit_spec, uparams, x, positions, mode,
             win = spec.sliding_window or cfg.sliding_window
             fn = M.mla_apply if cfg.mla else M.attn_apply
             att, nc = fn(cfg, lp["attn"], h, positions=positions, mode=mode,
-                         cache=lc, window=win)
+                         cache=lc, window=win, block_tables=block_tables)
             x = x + att
             h2 = M.rmsnorm(x, lp["ln2"], cfg.rms_eps, cfg.use_pallas)
             if spec.moe:
@@ -165,7 +196,7 @@ def _unit_apply(cfg: ModelConfig, unit_spec, uparams, x, positions, mode,
 
 
 def _segment_apply(cfg: ModelConfig, seg: Segment, sparams, x, positions,
-                   mode, scache, enc):
+                   mode, scache, enc, block_tables=None):
     has_cache = scache is not None
 
     def body(carry, xs):
@@ -174,8 +205,10 @@ def _segment_apply(cfg: ModelConfig, seg: Segment, sparams, x, positions,
             up, uc = xs
         else:
             up, uc = xs, None
+        # block_tables is layer-invariant: captured by the scan body, not
+        # threaded through the carry
         xc, a, nc = _unit_apply(cfg, seg.unit_spec, up, xc, positions, mode,
-                                uc, enc)
+                                uc, enc, block_tables)
         return (xc, aux + a), (nc if has_cache else None)
 
     if cfg.remat and mode == "full":
@@ -194,12 +227,18 @@ def cast_params(cfg: ModelConfig, params):
 
 def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
             encoder_embeds=None, mode: str = "full", cache=None,
-            positions=None):
+            positions=None, block_tables=None):
     """Returns (hidden (B,L,D), new_cache, aux_loss).
 
     mode='full'    — training / scoring, no cache.
     mode='prefill' — like full but also fills ``cache``.
     mode='decode'  — single token step; ``positions`` is (B,1) absolute.
+
+    ``block_tables`` ((B, nb) int32) switches decode to the **paged**
+    KV layout: ``cache`` is then the shared block pool from
+    :func:`init_paged_cache` and each row reads/writes through its
+    table (prefill/full ignore it — paged prefill scatters a dense
+    single-row prefill into pool blocks at the serving layer).
     """
     params = cast_params(cfg, params)
     if cfg.embed_inputs:
@@ -220,7 +259,7 @@ def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
     for si, seg in enumerate(cfg.segments()):
         sc = cache[si] if cache is not None else None
         x, a, nc = _segment_apply(cfg, seg, params["segments"][si], x,
-                                  positions, mode, sc, enc)
+                                  positions, mode, sc, enc, block_tables)
         aux = aux + a
         new_segs.append(nc)
     x = M.rmsnorm(x, params["final_norm"], cfg.rms_eps, cfg.use_pallas)

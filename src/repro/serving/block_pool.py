@@ -1,0 +1,128 @@
+"""Host-side KV block-pool allocator for the paged serving cache.
+
+The paged layout slices the KV cache into fixed ``block_size``-token
+blocks drawn from a shared pool; a sequence owns ``ceil(len / bs)``
+blocks instead of a full ``max_seq_len`` arena row, so the HBM budget
+admits ~``max_len / mean_len`` times more concurrent sequences on
+ragged traffic.  This module is the pure-Python bookkeeping half: the
+device half (the pool arrays and the Pallas paged-attention kernel that
+walks the per-slot block tables) lives in
+:mod:`repro.models.transformer` / :mod:`repro.kernels.paged_attention`.
+
+Design notes:
+
+- **Block 0 is the trash block.**  It is never handed out; block-table
+  rows are padded with 0, so device-side writes that fall outside a
+  slot's allocated prefix (bucket-padding garbage at admit, post-EOS
+  decode writes before the slot is harvested) land in a block nobody
+  reads.  This removes every bounds check from the decode hot loop.
+  (When a finished slot's table is fully allocated, its clamped
+  post-EOS writes wrap into its own last block instead — equally dead,
+  since a finished slot is masked until harvest and its blocks are
+  re-scattered before reuse, but it means harvested blocks must never
+  be treated as intact prefixes.)
+- **No external fragmentation.**  All blocks are the same size, the
+  free list is a stack, and any free block satisfies any request —
+  after arbitrary ragged alloc/free cycles an allocation succeeds iff
+  ``len(free) >= n``.  The only fragmentation is *internal*: the unused
+  tail of each sequence's last block, bounded by ``block_size - 1``
+  tokens per active sequence.
+- **Watermark backpressure.**  ``can_admit`` additionally requires
+  ``watermark`` blocks to stay free after the admission, reserving
+  headroom for decode-time appends of the already-running slots so the
+  scheduler rarely needs to preempt (the engine's preemption path is
+  the hard no-deadlock guarantee; the watermark keeps it cold).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+TRASH_BLOCK = 0
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` KV rows."""
+    return -(-max(n_tokens, 0) // block_size)
+
+
+class BlockAllocator:
+    """Fixed-size KV block pool: free-list alloc/free + watermark admission.
+
+    ``num_blocks`` counts the whole pool *including* the reserved trash
+    block, so device pool arrays are shaped ``(num_blocks, block_size,
+    ...)`` and ``capacity == num_blocks - 1`` blocks are allocatable.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 watermark: int = 0):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is reserved)")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        self.watermark = max(0, int(watermark))
+        # LIFO free list: recently freed (cache-warm) blocks reused first;
+        # the mirror set makes double-free detection O(1)
+        self._free: List[int] = list(range(num_blocks - 1, TRASH_BLOCK, -1))
+        self._free_set = set(self._free)
+        self._hwm = 0                      # high-water mark of blocks in use
+
+    # -------------------------------------------------------------- #
+    @property
+    def capacity(self) -> int:
+        return self.num_blocks - 1
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.capacity - self.num_free
+
+    @property
+    def high_water(self) -> int:
+        return self._hwm
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return blocks_for(n_tokens, self.block_size)
+
+    # -------------------------------------------------------------- #
+    def fits(self, n_tokens: int) -> bool:
+        """Whether a request of ``n_tokens`` total rows can EVER run
+        (its worst-case block count fits the whole pool)."""
+        return self.blocks_for(n_tokens) <= self.capacity
+
+    def can_admit(self, n_prompt_tokens: int, *,
+                  reserve: Optional[int] = None,
+                  ignore_watermark: bool = False) -> bool:
+        """Admission control: enough free blocks for the prompt AND a
+        reserve of free blocks stays intact afterwards (``reserve``
+        overrides the constructed watermark — the engine passes a
+        dynamic reserve scaled by the number of *running* slots).  The
+        engine waives the reserve when nothing is running (an empty
+        batch means it protects nobody and waiting would deadlock)."""
+        need = self.blocks_for(n_prompt_tokens)
+        r = self.watermark if reserve is None else max(0, int(reserve))
+        if ignore_watermark:
+            r = 0
+        return self.num_free - need >= r
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` blocks, or None (and no change) if unavailable."""
+        if n < 0 or n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(out)
+        self._hwm = max(self._hwm, self.num_used)
+        return out
+
+    def free(self, ids) -> None:
+        for i in ids:
+            if i == TRASH_BLOCK:
+                raise ValueError("freeing the trash block")
+            if i in self._free_set or not (0 < i < self.num_blocks):
+                raise ValueError(f"double/invalid free of block {i}")
+            self._free.append(i)
+            self._free_set.add(i)

@@ -17,23 +17,54 @@ cannot avoid:
    have produced.
 
 2. **Continuous batching** (``GenerationEngine.serve``): a slot-based
-   scheduler admits variable-length prompts from a queue into a fixed
-   ``(slots, S)`` KV-cache arena.  Each slot carries its own absolute
+   scheduler admits variable-length prompts from a queue into a
+   ``slots``-wide KV cache.  Each slot carries its own absolute
    position, stop limit and done flag; when a sequence hits EOS (or its
    per-request ``max_new_tokens``) its slot is harvested at the next
-   chunk boundary and refilled from the queue, so the arena stays full
+   chunk boundary and refilled from the queue, so the batch stays full
    under ragged prompt/response length distributions instead of padding
    every request to the batch maximum.
+
+The KV cache behind ``serve`` comes in two layouts (``kv_layout``):
+
+- ``"dense"`` — a fixed ``(slots, S)`` arena: every slot reserves
+  ``max_seq_len`` KV rows for its whole lifetime.  Simple, and the
+  token-identity reference for the paged layout.
+- ``"paged"`` — the arena is replaced by a shared pool of fixed
+  ``block_size``-token KV blocks plus per-slot *block tables*
+  (vLLM-style PagedAttention; OpenRLHF adopts the same design for its
+  RLHF generation phase).  A slot holds only the blocks its tokens
+  occupy: prompt blocks are allocated and scattered at admission,
+  decode-time blocks are appended at chunk boundaries, and all of a
+  slot's blocks return to the pool when it is harvested.  At an equal
+  KV-HBM budget this admits ~``max_len / mean_len`` times more
+  concurrent sequences on ragged traffic.  Admission control becomes
+  "free slot AND enough free blocks for the prompt, leaving a
+  ``watermark`` reserve"; if a decode-time append still finds the pool
+  empty, the newest slot is preempted (blocks freed, request requeued
+  at the queue front for full re-generation) so the oldest sequences
+  always make progress — the scheduler cannot deadlock.  Decode
+  attention walks the block table: the Pallas kernel in
+  :mod:`repro.kernels.paged_attention` on TPU, a gather + dense-decode
+  reference under ``jnp``.  Given the same admission order and no
+  preemptions, token streams are identical to the dense layout.
 
 Ragged prefill correctness: prompts are right-padded to a shape bucket and
 prefilled with causal attention, so real tokens never attend padding.  The
 padded KV rows beyond the true prompt length are garbage, but decode
 attention only exposes cache rows ``< pos + 1`` and the first decode steps
 overwrite exactly those rows (row ``pos`` is written before ``pos`` becomes
-visible) — the garbage is dead by construction.  Architectures with
-recurrent state (SSM / hybrid) cannot skip pad tokens this way, so for
-them admission prefills at the exact prompt length (one compile per
-distinct length instead of per bucket).
+visible) — the garbage is dead by construction.  The same argument covers
+the paged layout, where bucket-padding rows past the prompt's last
+allocated block (and post-EOS decode writes before harvest) additionally
+fall through the table's trash-block padding into block 0, which nothing
+reads (a finished slot with a fully allocated table wraps such writes
+into its own last block instead — equally dead, as its blocks are
+re-scattered before reuse).  Architectures with recurrent state (SSM /
+hybrid) cannot skip pad
+tokens this way, so for them admission prefills at the exact prompt
+length (one compile per distinct length instead of per bucket); they are
+dense-only.
 """
 from __future__ import annotations
 
@@ -47,6 +78,7 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ATTN, ModelConfig
+from repro.serving.block_pool import TRASH_BLOCK, BlockAllocator, blocks_for
 from repro.serving.generate import decode_scan_step, decode_step, prefill
 from repro.serving.sampling import sample
 
@@ -84,17 +116,30 @@ class GenerationEngine:
 
     def __init__(self, cfg: ModelConfig, *, max_new_tokens: int,
                  temperature: float = 1.0, top_k: int = 0,
-                 eos_id: Optional[int] = None, chunk: int = 32):
+                 eos_id: Optional[int] = None, chunk: int = 32,
+                 kv_layout: str = "dense", block_size: int = 16):
         self.cfg = cfg
         self.max_new_tokens = int(max_new_tokens)
         self.temperature = float(temperature)
         self.top_k = int(top_k)
         self.eos_id = eos_id
         self.chunk = max(1, int(chunk))
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout={kv_layout!r}")
+        self.kv_layout = kv_layout
+        self.block_size = max(1, int(block_size))
         # exact-length prefill for layers with recurrent state (see module
         # docstring); pure-attention stacks can use shape buckets
         self._exact_prefill = any(
             ls.kind != ATTN for seg in cfg.segments() for ls in seg.unit_spec)
+        if kv_layout == "paged":
+            # paged_cache_struct raises for SSM/hybrid/cross/sliding-window;
+            # MLA and int8-KV have their own cache geometries (dense-only)
+            if cfg.mla or cfg.kv_quant or cfg.arch_type == "vlm":
+                raise NotImplementedError(
+                    "paged KV cache supports plain-GQA token-input "
+                    "decoder LMs (no MLA / int8-KV / VLM)")
+            T.paged_cache_struct(cfg, 2, self.block_size)
         self.last_stats: dict = {}
 
         self._prefill_fixed = jax.jit(self._prefill_fixed_impl)
@@ -109,6 +154,13 @@ class GenerationEngine:
         # donated: it is reused across chunks until the next admit
         self._serve_chunk_fn = jax.jit(self._serve_chunk_impl,
                                        donate_argnums=(1, 2, 4, 5))
+        # paged variants: retrace per (bucket, prompt-block-count) shape;
+        # block tables ride along un-donated (re-uploaded from the host
+        # allocator's truth each dispatch)
+        self._admit_paged_fn = jax.jit(self._admit_paged_impl,
+                                       donate_argnums=(6, 7, 8, 9, 10))
+        self._paged_chunk_fn = jax.jit(self._paged_chunk_impl,
+                                       donate_argnums=(1, 2, 3, 4, 5))
 
     # ================================================================ #
     # fixed-batch path with early exit (PPO experience generation)
@@ -193,33 +245,46 @@ class GenerationEngine:
     # ================================================================ #
     # continuous batching over a slot arena
     # ================================================================ #
-    def _admit_impl(self, params, tokens, length, max_new, slot,
-                    arena, logits_buf, pos, done, limit):
-        """Prefill one padded prompt into a fresh single-row cache and
-        scatter it into arena slot ``slot``; reset the slot's decode
-        state.  ``length`` is the true (unpadded) prompt length."""
+    def _prefill_row(self, params, tokens, length, row):
+        """Shared admission body for both KV layouts: prefill one padded
+        prompt into the single-row cache ``row``; returns the filled row
+        and the logits of the TRUE last prompt token (``length`` is the
+        unpadded prompt length)."""
         cfg = self.cfg
-        # single-row cache with the arena's own (S, dtype) geometry
-        row = jax.tree_util.tree_map(
-            lambda a: jnp.zeros((a.shape[0], 1) + a.shape[2:], a.dtype),
-            arena)
         hidden, row, _ = T.forward(cfg, params, tokens=tokens,
                                    mode="prefill", cache=row)
         h_last = hidden[0, length - 1]                     # true last token
         logit = T.logits_fn(cfg, params, h_last[None, None])[0, 0]
-        arena = jax.tree_util.tree_map(
-            lambda a, r: a.at[:, slot].set(r[:, 0]), arena, row)
-        return (arena,
-                logits_buf.at[slot].set(logit),
+        return row, logit
+
+    @staticmethod
+    def _slot_reset(slot, logit, length, max_new, logits_buf, pos, done,
+                    limit):
+        """Reset slot ``slot``'s decode state for a fresh admission."""
+        return (logits_buf.at[slot].set(logit),
                 pos.at[slot].set(length),
                 done.at[slot].set(False),
                 limit.at[slot].set(length + max_new))
 
-    def _serve_chunk_impl(self, params, logits, arena, key, pos, done,
-                          limit):
-        """``chunk`` decode steps over the whole arena.  Same body as
-        :func:`decode_scan_step` plus the per-slot stop limit (absolute
-        position ``prompt_len + max_new_tokens``)."""
+    def _admit_impl(self, params, tokens, length, max_new, slot,
+                    arena, logits_buf, pos, done, limit):
+        """Prefill one padded prompt into a fresh single-row cache and
+        scatter it into arena slot ``slot``; reset the slot's decode
+        state."""
+        # single-row cache with the arena's own (S, dtype) geometry
+        row = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((a.shape[0], 1) + a.shape[2:], a.dtype),
+            arena)
+        row, logit = self._prefill_row(params, tokens, length, row)
+        arena = jax.tree_util.tree_map(
+            lambda a, r: a.at[:, slot].set(r[:, 0]), arena, row)
+        return (arena,) + self._slot_reset(slot, logit, length, max_new,
+                                           logits_buf, pos, done, limit)
+
+    def _serve_step(self, params, limit, block_tables=None):
+        """Scan body shared by the dense and paged serve chunks: same
+        sampler, PRNG-split sequence and stop logic, so the two layouts
+        emit identical token streams given identical admission order."""
         cfg = self.cfg
         pad_tok = self.eos_id if self.eos_id is not None else 0
 
@@ -229,28 +294,53 @@ class GenerationEngine:
             tok = sample(logits, sub, temperature=self.temperature,
                          top_k=self.top_k)
             tok = jnp.where(done, pad_tok, tok)
-            logits, cache = decode_step(cfg, params, tok, cache, pos)
+            logits, cache = decode_step(cfg, params, tok, cache, pos,
+                                        block_tables=block_tables)
             new_done = done | (pos + 1 >= limit)
             if self.eos_id is not None:
                 new_done = new_done | (tok == self.eos_id)
             return (logits, cache, key, pos + 1, new_done), (tok, done)
 
+        return step
+
+    def _serve_chunk_impl(self, params, logits, arena, key, pos, done,
+                          limit):
+        """``chunk`` decode steps over the whole arena.  Same body as
+        :func:`decode_scan_step` plus the per-slot stop limit (absolute
+        position ``prompt_len + max_new_tokens``)."""
+        step = self._serve_step(params, limit)
         carry, (toks, was) = jax.lax.scan(
             step, (logits, arena, key, pos, done), None, length=self.chunk)
         return carry, toks, was
 
     def serve(self, params, requests: Sequence[Request], key, *,
-              slots: int = 8, max_seq_len: Optional[int] = None
-              ) -> List[Completion]:
-        """Run a queue of ragged requests through a ``slots``-wide arena.
+              slots: int = 8, max_seq_len: Optional[int] = None,
+              num_blocks: Optional[int] = None,
+              watermark: Optional[int] = None) -> List[Completion]:
+        """Run a queue of ragged requests through a ``slots``-wide batch.
 
         Free slots are refilled at chunk boundaries, so each admitted
         sequence decodes alongside whatever else is in flight — the
         continuous-batching scheduler of vLLM/OpenRLHF at chunk
         granularity.  Per-sequence outputs are independent of batch
-        composition (each slot attends only its own cache row), so greedy
+        composition (each slot attends only its own cache rows), so greedy
         results are identical to running each request alone.
+
+        With ``kv_layout="paged"``, ``num_blocks`` sizes the shared block
+        pool (default: dense-arena parity, ``slots * ceil(S / block_size)``
+        usable blocks) and ``watermark`` is the free-block reserve kept by
+        admission control (default: dynamic — one chunk's worth of decode
+        appends per currently-running slot,
+        ``n_active * ceil(chunk / block_size)``).  Both are rejected for
+        the dense layout.
         """
+        if self.kv_layout == "paged":
+            return self._serve_paged(params, requests, key, slots=slots,
+                                     max_seq_len=max_seq_len,
+                                     num_blocks=num_blocks,
+                                     watermark=watermark)
+        if num_blocks is not None or watermark is not None:
+            raise ValueError("num_blocks/watermark require kv_layout='paged'")
         cfg = self.cfg
         if cfg.arch_type == "vlm" or not cfg.embed_inputs:
             raise NotImplementedError(
@@ -328,5 +418,245 @@ class GenerationEngine:
             "decode_steps": chunks * self.chunk,
             "scheduled_tokens": chunks * self.chunk * slots,
             "generated_tokens": int(sum(c.tokens.size for c in out)),
+        }
+        return out
+
+    # ================================================================ #
+    # paged continuous batching: block pool + per-slot block tables
+    # ================================================================ #
+    def _admit_paged_impl(self, params, tokens, length, max_new, slot,
+                          blk_ids, pool, logits_buf, pos, done, limit):
+        """Prefill one padded prompt into a fresh dense single-row cache,
+        scatter it block-wise into the pool at ``blk_ids`` (trash-padded
+        past the prompt's last allocated block), and reset the slot's
+        decode state.  Retraces per (bucket length, block count) shape."""
+        bs = self.block_size
+        Lb = tokens.shape[1]
+        row, logit = self._prefill_row(params, tokens, length,
+                                       T.init_cache(self.cfg, 1, Lb))
+        nbp = blk_ids.shape[0]
+        pad = nbp * bs - Lb
+
+        def scatter(pool_leaf, row_leaf):
+            r = row_leaf[:, 0]                    # (n_units, Lb, KV, hd)
+            if pad:
+                r = jnp.pad(r, ((0, 0), (0, pad)) + ((0, 0),) * (r.ndim - 2))
+            r = r.reshape((r.shape[0], nbp, bs) + r.shape[2:])
+            return pool_leaf.at[:, blk_ids].set(r)
+
+        pool = jax.tree_util.tree_map(scatter, pool, row)
+        return (pool,) + self._slot_reset(slot, logit, length, max_new,
+                                          logits_buf, pos, done, limit)
+
+    def _paged_chunk_impl(self, params, logits, pool, key, pos, done,
+                          limit, block_tables):
+        """``chunk`` decode steps over the slot batch, KV read/written
+        through the block tables.  Identical step body (sampler, PRNG
+        splits, stop logic) to the dense chunk."""
+        step = self._serve_step(params, limit, block_tables)
+        carry, (toks, was) = jax.lax.scan(
+            step, (logits, pool, key, pos, done), None, length=self.chunk)
+        return carry, toks, was
+
+    def _serve_paged(self, params, requests: Sequence[Request], key, *,
+                     slots: int, max_seq_len: Optional[int],
+                     num_blocks: Optional[int], watermark: Optional[int]
+                     ) -> List[Completion]:
+        """Continuous batching over the paged KV layout.
+
+        Per chunk boundary: harvest finished slots (their blocks return
+        to the pool), admit queued requests while the watermark holds,
+        top up every active slot's block table to cover the next chunk
+        (preempting the newest slot if the pool runs dry — the oldest
+        sequences always progress, so the scheduler cannot deadlock),
+        then dispatch one fused ``chunk``-step decode.
+        """
+        cfg = self.cfg
+        if cfg.arch_type == "vlm" or not cfg.embed_inputs:
+            raise NotImplementedError(
+                "continuous batching supports token-input decoder LMs")
+        bs = self.block_size
+        queue = deque(requests)
+        need = max((len(r.tokens) + r.max_new_tokens for r in requests),
+                   default=1)
+        S = max_seq_len or need
+        if need > S:
+            raise ValueError(f"max_seq_len={S} < longest request ({need})")
+        S = -(-S // bs) * bs               # block-aligned virtual length
+        nbmax = S // bs
+        if num_blocks is None:
+            num_blocks = slots * nbmax + 1     # dense-arena parity + trash
+        alloc = BlockAllocator(num_blocks, bs)
+        # admission reserve: ``watermark`` free blocks, or (default) one
+        # chunk's worth of decode appends per *running* slot — a static
+        # reserve sized by the slot cap would strangle small pools
+        chunk_blocks = blocks_for(self.chunk, bs)
+        for r in requests:
+            if (r.max_new_tokens > 0
+                    and not alloc.fits(len(r.tokens) + r.max_new_tokens)):
+                raise ValueError(
+                    f"request {r.uid} needs "
+                    f"{alloc.blocks_for(len(r.tokens) + r.max_new_tokens)} "
+                    f"blocks; pool holds {alloc.capacity}")
+
+        pool = T.init_paged_cache(cfg, num_blocks, bs)
+        key = jnp.array(key, copy=True)    # chunk fns donate the key
+        logits = jnp.zeros((slots, cfg.vocab_size), jnp.float32)
+        pos = jnp.zeros((slots,), jnp.int32)
+        done = jnp.ones((slots,), bool)
+        limit = jnp.zeros((slots,), jnp.int32)
+        tables = np.full((slots, nbmax), TRASH_BLOCK, np.int32)  # host truth
+        slot_req: List[Optional[Request]] = [None] * slots
+        slot_toks: List[List[int]] = [[] for _ in range(slots)]
+        slot_blocks: List[List[int]] = [[] for _ in range(slots)]
+        # host mirror of pos/limit: admit sets them and every dispatched
+        # chunk advances every slot by exactly ``chunk`` steps, so block
+        # top-up never has to sync device state before a dispatch
+        host_pos = [0] * slots
+        host_limit = [0] * slots
+        stamp = [0] * slots                # admission order, newest = max
+        tick = 0
+        out: List[Completion] = []
+        admitted = chunks = preemptions = 0
+        conc: List[int] = []
+        used_samples: List[int] = []
+
+        def release(b: int, *, requeue: bool) -> None:
+            """Return slot ``b``'s blocks to the pool; optionally requeue
+            its request at the queue front (preemption).  The slot's
+            device state keeps decoding garbage into the trash block
+            until the next admission resets it — nothing reads it."""
+            nonlocal preemptions
+            if slot_blocks[b]:
+                alloc.free(slot_blocks[b])
+                slot_blocks[b] = []
+            tables[b, :] = TRASH_BLOCK
+            if requeue and slot_req[b] is not None:
+                queue.appendleft(slot_req[b])
+                preemptions += 1
+            slot_req[b] = None
+            slot_toks[b] = []
+
+        while queue or any(r is not None for r in slot_req):
+            # ---- admit: free slot AND free blocks (watermark holds) ----
+            for b in range(slots):
+                if slot_req[b] is not None or not queue:
+                    continue
+                r = None
+                while queue:                 # zero-budget: trivially done
+                    cand = queue[0]
+                    if cand.max_new_tokens <= 0:
+                        queue.popleft()
+                        out.append(Completion(
+                            uid=cand.uid, prompt=np.asarray(cand.tokens),
+                            tokens=np.zeros((0,), np.int32),
+                            finished_by_eos=False))
+                        continue
+                    # the watermark is waived when nothing is running:
+                    # the reserve protects nobody and waiting would wedge
+                    n_active = sum(s is not None for s in slot_req)
+                    reserve = (watermark if watermark is not None
+                               else n_active * chunk_blocks)
+                    if not alloc.can_admit(len(cand.tokens),
+                                           reserve=reserve,
+                                           ignore_watermark=n_active == 0):
+                        break            # backpressure: head waits
+                    r = queue.popleft()
+                    break
+                if r is None:
+                    break                # FIFO: never admit past the head
+                Lp = len(r.tokens)
+                Lb = min(_next_bucket(Lp), S)
+                nbp = -(-Lb // bs)       # static scatter width per bucket
+                ids = alloc.alloc(alloc.blocks_for(Lp))
+                tables[b, :] = TRASH_BLOCK
+                tables[b, :len(ids)] = ids
+                slot_blocks[b] = list(ids)
+                blk_ids = np.full((nbp,), TRASH_BLOCK, np.int32)
+                blk_ids[:len(ids)] = ids
+                padded = np.zeros((1, Lb), np.int32)
+                padded[0, :Lp] = np.asarray(r.tokens, np.int32)
+                pool, logits, pos, done, limit = self._admit_paged_fn(
+                    params, jnp.asarray(padded), jnp.int32(Lp),
+                    jnp.int32(r.max_new_tokens), jnp.int32(b),
+                    jnp.asarray(blk_ids), pool, logits, pos, done, limit)
+                slot_req[b], slot_toks[b] = r, []
+                host_pos[b] = Lp
+                host_limit[b] = Lp + r.max_new_tokens
+                tick += 1
+                stamp[b] = tick
+                admitted += 1
+            active = [b for b in range(slots) if slot_req[b] is not None]
+            if not active:
+                break                    # queue drained, all idle
+            # ---- top up tables to cover the next chunk; preempt the ----
+            # newest slot on pool exhaustion (oldest always progresses)
+            for b in sorted(active, key=lambda x: stamp[x]):
+                if slot_req[b] is None:          # preempted this round
+                    continue
+                cover = min(host_pos[b] + self.chunk, host_limit[b])
+                want = min(alloc.blocks_for(cover), nbmax)
+                while len(slot_blocks[b]) < want:
+                    got = alloc.alloc(want - len(slot_blocks[b]))
+                    if got is not None:
+                        n0 = len(slot_blocks[b])
+                        tables[b, n0:n0 + len(got)] = got
+                        slot_blocks[b].extend(got)
+                        break
+                    # evict the newest sequence overall — possibly the
+                    # requester itself, so an older slot is never starved
+                    # by a younger one
+                    victims = [v for v in range(slots)
+                               if slot_req[v] is not None]
+                    if not victims:      # unreachable: fits() was checked
+                        raise RuntimeError("paged KV pool exhausted with "
+                                           "no slot to preempt")
+                    victim = max(victims, key=lambda v: stamp[v])
+                    release(victim, requeue=True)
+                    if victim == b:
+                        break
+            active = [b for b in range(slots) if slot_req[b] is not None]
+            conc.append(len(active))
+            used_samples.append(alloc.num_used)
+            # ---- one fused chunk over the slot batch ----
+            (logits, pool, key, pos, done), toks, was = \
+                self._paged_chunk_fn(params, logits, pool, key, pos, done,
+                                     limit, jnp.asarray(tables))
+            chunks += 1
+            for b in range(slots):
+                host_pos[b] += self.chunk
+            toks_h, was_h = np.asarray(toks), np.asarray(was)
+            done_h = np.asarray(done)
+            for b in range(slots):
+                if slot_req[b] is None:
+                    continue
+                slot_toks[b].extend(toks_h[~was_h[:, b], b].tolist())
+                if done_h[b]:
+                    r = slot_req[b]
+                    gen = np.asarray(slot_toks[b], np.int32)
+                    by_eos = (self.eos_id is not None and gen.size > 0
+                              and int(gen[-1]) == self.eos_id
+                              and gen.size < r.max_new_tokens)
+                    out.append(Completion(uid=r.uid,
+                                          prompt=np.asarray(r.tokens),
+                                          tokens=gen,
+                                          finished_by_eos=by_eos))
+                    slot_req[b] = None
+                    release(b, requeue=False)    # blocks back to the pool
+        self.last_stats = {
+            "requests": len(out),
+            "admitted": admitted,            # includes re-admissions
+            "decode_steps": chunks * self.chunk,
+            "scheduled_tokens": chunks * self.chunk * slots,
+            "generated_tokens": int(sum(c.tokens.size for c in out)),
+            "preemptions": preemptions,
+            "max_concurrency": max(conc, default=0),
+            "mean_concurrency": float(np.mean(conc)) if conc else 0.0,
+            "block_size": bs,
+            "num_blocks": num_blocks,
+            "block_high_water": alloc.high_water,
+            "mean_blocks_used": (float(np.mean(used_samples))
+                                 if used_samples else 0.0),
+            "kv_budget_tokens": alloc.capacity * bs,
         }
         return out

@@ -42,9 +42,11 @@ def prefill(cfg: ModelConfig, params, tokens, cache, *, embeds=None,
 
 
 def decode_step(cfg: ModelConfig, params, token, cache, position, *,
-                embeds=None, encoder_embeds=None):
+                embeds=None, encoder_embeds=None, block_tables=None):
     """One decode step.  token: (B,) int32; position: (B,) absolute.
-    Returns (logits (B, V), new_cache)."""
+    Returns (logits (B, V), new_cache).  With ``block_tables`` set,
+    ``cache`` is the paged block pool (see
+    :func:`repro.models.transformer.init_paged_cache`)."""
     kw = {}
     if cfg.embed_inputs:
         kw["tokens"] = token[:, None]
@@ -52,7 +54,8 @@ def decode_step(cfg: ModelConfig, params, token, cache, position, *,
         kw["embeds"] = embeds
     hidden, cache, _ = T.forward(cfg, params, mode="decode", cache=cache,
                                  positions=position[:, None],
-                                 encoder_embeds=encoder_embeds, **kw)
+                                 encoder_embeds=encoder_embeds,
+                                 block_tables=block_tables, **kw)
     logits = T.logits_fn(cfg, params, hidden)[:, 0]
     return logits, cache
 

@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Markdown link check for the docs CI job (stdlib only).
+
+Verifies that every relative ``[text](target)`` link in the given
+markdown files (default: README.md and docs/**/*.md) points at a file
+or directory that exists in the repo.  External links (http/https/
+mailto) and pure in-page anchors are skipped; ``path#anchor`` targets
+are checked for the path part only.
+
+    python tools/check_markdown_links.py [files...]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — excluding images' leading ! is unnecessary: image
+# targets should exist too.  Nested parens are not used in this repo.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(md: pathlib.Path) -> list:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    # fenced code blocks often contain pseudo-links (array indexing in
+    # python snippets) — strip them before matching
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists():
+            errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def main(argv) -> int:
+    if argv:
+        files = [pathlib.Path(a) for a in argv]
+    else:
+        root = pathlib.Path(__file__).resolve().parent.parent
+        files = [root / "README.md"] + sorted(
+            (root / "docs").glob("**/*.md"))
+    errors = []
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md}: file not found")
+            continue
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAIL' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
