@@ -15,7 +15,7 @@ import numpy as np
 from repro.core import PPOConfig, RLHFEngine, RLHFPipeline, StageConfig
 from repro.data import ConstantTaskDataset, CopyTaskDataset, DataBlender
 from repro.models.config import ModelConfig
-from repro.serving.generate import generate
+from repro.serving.engine import GenerationEngine, Request
 
 V = 64
 ACTOR = ModelConfig(name="quickstart-actor", arch_type="dense", n_layers=2,
@@ -47,14 +47,15 @@ def main():
     print(f"   reward {scores[0]:+.3f} -> {scores[-1]:+.3f}")
 
     print("== Inference API ==")
-    prompts = jnp.asarray(
-        np.stack([ds[0].get_prompt(i) for i in range(4)]))
-    out = generate(ACTOR, pipe.e.actor_params, prompts,
-                   jax.random.PRNGKey(1), max_new_tokens=8,
-                   temperature=0.0)
+    engine = GenerationEngine(ACTOR, max_new_tokens=8, temperature=0.0,
+                              chunk=4)
+    reqs = [Request(uid=i, tokens=np.asarray(ds[0].get_prompt(i), np.int32))
+            for i in range(4)]
+    outs = {c.uid: c for c in engine.serve(
+        pipe.e.actor_params, reqs, jax.random.PRNGKey(1), slots=4)}
     for i in range(2):
-        print(f"   prompt {np.asarray(prompts[i])} -> "
-              f"{np.asarray(out['sequences'][i, 8:])}")
+        print(f"   prompt {np.asarray(reqs[i].tokens)} -> "
+              f"{outs[i].tokens}  ({outs[i].finish_reason})")
     print("done.")
 
 

@@ -74,9 +74,13 @@ class HybridEngine:
         """Build a :class:`repro.serving.engine.GenerationEngine` for this
         actor.  The engine expects params already in the inference layout:
         call :meth:`to_inference` once per phase and pass the result to
-        ``engine.generate`` / ``engine.serve`` — that pairing is the
-        Hybrid Engine contract (one reshard, then a serving-grade decode
-        loop under the TP layout)."""
+        ``engine.generate`` / ``engine.serve`` / ``engine.core`` — that
+        pairing is the Hybrid Engine contract (one reshard, then a
+        serving-grade decode loop under the TP layout).  ``engine.core``
+        returns the stepwise request-level core
+        (:class:`repro.serving.engine.EngineCore`): ``add_request`` /
+        ``step`` / ``cancel`` with per-request sampling params, used by
+        both the serve launcher and ragged PPO experience generation."""
         from repro.serving.engine import GenerationEngine
         return GenerationEngine(self.cfg, **gen_kwargs)
 

@@ -19,6 +19,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ema as EMA
 from repro.core import experience as X
@@ -36,6 +37,7 @@ class PPOConfig:
     max_new_tokens: int = 32
     temperature: float = 1.0
     top_k: int = 0
+    top_p: float = 1.0
     eos_id: Optional[int] = None   # enables early-exit decode when set
     decode_chunk: int = 32         # decode dispatch granularity (engine)
     kl_coef: float = 0.1
@@ -112,14 +114,19 @@ def critic_step(cfg: ModelConfig, ppo: PPOConfig, state: TrainState,
 
 def make_experience(actor_cfg: ModelConfig, critic_cfg: ModelConfig,
                     ppo: PPOConfig, actor_params, ref_params, critic_params,
-                    reward_params, sequences, response_mask) -> X.Experience:
+                    reward_params, sequences, response_mask,
+                    attn_mask=None) -> X.Experience:
     """Score a generated batch: logprobs, ref logprobs, values, rewards,
     GAE.  Pure function — jitted by the trainer; also the dry-run's
-    'experience scoring' graph."""
+    'experience scoring' graph.  ``attn_mask`` marks the real (prompt +
+    generated) tokens of each row so the reward model scores the last
+    real token; ``None`` means the batch has no padding tail (the
+    fixed-shape path)."""
     logp = actor_logprobs(actor_cfg, actor_params, sequences)
     ref_logp = actor_logprobs(actor_cfg, ref_params, sequences)
     values = R.values(critic_cfg, critic_params, sequences)[:, :-1]
-    attn_mask = jnp.ones(sequences.shape, jnp.float32)
+    if attn_mask is None:
+        attn_mask = jnp.ones(sequences.shape, jnp.float32)
     score = R.end_scores(critic_cfg, reward_params, sequences, attn_mask)
     mask = response_mask[:, 1:].astype(jnp.float32)
     rewards = X.kl_rewards(logp, ref_logp, mask, score,
@@ -149,7 +156,8 @@ class PPOTrainer:
 
         gen_opts = dict(max_new_tokens=ppo.max_new_tokens,
                         temperature=ppo.temperature, top_k=ppo.top_k,
-                        eos_id=ppo.eos_id, chunk=ppo.decode_chunk)
+                        top_p=ppo.top_p, eos_id=ppo.eos_id,
+                        chunk=ppo.decode_chunk)
         self.gen_engine = (engine.generation_engine(**gen_opts)
                            if engine is not None
                            else GenerationEngine(actor_cfg, **gen_opts))
@@ -161,8 +169,18 @@ class PPOTrainer:
     # -------------------------------------------------------------- #
     def generate_experience(self, prompts, key):
         """Inference phase: one Hybrid-Engine reshard to the TP layout,
-        then the serving-grade engine decodes with early exit (sequences
-        are token-identical to the fixed-scan reference path)."""
+        then the serving-grade engine decodes.
+
+        ``prompts`` is either a fixed-shape ``(B, Lp)`` token array —
+        the batched early-exit decode path, token-identical to the
+        fixed-scan reference — or a list of
+        :class:`repro.serving.engine.Request` with ragged prompts and
+        per-request :class:`~repro.serving.engine.SamplingParams`, which
+        runs through the request-level engine core (continuous batching;
+        freed KV slots are refilled mid-batch) and is scored at each
+        sequence's true length via the attention mask."""
+        if isinstance(prompts, (list, tuple)):
+            return self._experience_from_requests(list(prompts), key)
         t0 = time.perf_counter()
         params = self.actor.params
         if self.engine is not None:
@@ -179,6 +197,48 @@ class PPOTrainer:
                      "gen_tok_s": n_gen / max(gen_s, 1e-9),
                      "decode_steps": float(
                          self.gen_engine.last_stats["decode_steps"])}
+
+    def _experience_from_requests(self, requests, key, *, slots: int = 8):
+        """Ragged experience generation through the stepwise engine core:
+        serve the request queue (continuous batching over ragged
+        prompts/budgets), then right-pad ``prompt | generated | pad``
+        rows to one stable width for the jitted scorer.  Padding is
+        excluded from the response mask and from the reward model's
+        end-score position via the attention mask."""
+        t0 = time.perf_counter()
+        params = self.actor.params
+        if self.engine is not None:
+            params = self.engine.to_inference(params)
+        eng = self.gen_engine
+        outs = {c.uid: c for c in eng.serve(
+            params, requests, key, slots=min(slots, len(requests)))}
+        gen_s = time.perf_counter() - t0
+        # stable width across PPO iterations with a fixed budget/geometry
+        W = max(len(r.tokens) + eng.resolve(r)[3] for r in requests)
+        B = len(requests)
+        pad_tok = eng.eos_id if eng.eos_id is not None else 0
+        seqs = np.full((B, W), pad_tok, np.int32)
+        resp = np.zeros((B, W), bool)
+        attn = np.zeros((B, W), np.float32)
+        for i, r in enumerate(requests):
+            c = outs[r.uid]
+            Lp, n = len(c.prompt), int(c.tokens.size)
+            seqs[i, :Lp] = c.prompt
+            seqs[i, Lp:Lp + n] = c.tokens
+            resp[i, Lp:Lp + n] = True
+            attn[i, :Lp + n] = 1.0
+        sequences = jnp.asarray(seqs)
+        response_mask = jnp.asarray(resp)
+        n_gen = float(response_mask.sum())
+        exp, score = self._mk_exp(self.actor.params, self.ref_params,
+                                  self.critic.params, self.reward_params,
+                                  sequences, response_mask,
+                                  jnp.asarray(attn))
+        return exp, {"reward_score": float(score.mean()),
+                     "gen_len": float(response_mask.sum(1).mean()),
+                     "gen_tok_s": n_gen / max(gen_s, 1e-9),
+                     "decode_steps": float(
+                         eng.last_stats["decode_steps"])}
 
     def train_rlhf(self, exp: X.Experience, ptx_batch=None):
         """Training phase (ZeRO layout)."""

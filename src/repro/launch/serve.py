@@ -1,16 +1,20 @@
 """Serving launcher — the DeepSpeed-Chat inference-API analogue.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
-        --reduced --requests 16 --max-new 32 --scheduler continuous \
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \\
+        --reduced --requests 16 --max-new 32 --scheduler continuous \\
         --kv-layout paged --block-size 16
 
-Drives the serving-grade :class:`repro.serving.engine.GenerationEngine`:
+Drives the stepwise request-level core
+(:class:`repro.serving.engine.EngineCore`) behind
+:class:`repro.serving.engine.GenerationEngine`.  Both schedulers run the
+SAME drain loop — they differ only in when requests are fed to the core:
 
-- ``--scheduler fixed``      one padded batch at a time, early-exit
-                             chunked decode (the PPO experience path)
-- ``--scheduler continuous`` slot-based continuous batching; freed slots
-                             are refilled from the request queue at
-                             chunk boundaries
+- ``--scheduler fixed``      batch-synchronous baseline: requests are fed
+                             in slot-sized waves and a new wave is only
+                             admitted once the previous wave fully drains
+- ``--scheduler continuous`` everything is queued up front; freed slots
+                             are refilled from the queue at chunk
+                             boundaries (continuous batching)
 - ``--kv-layout dense``      fixed ``(slots, S)`` KV arena (the
                              token-identity reference)
 - ``--kv-layout paged``      block-pooled KV cache with per-slot block
@@ -20,30 +24,42 @@ Drives the serving-grade :class:`repro.serving.engine.GenerationEngine`:
                              dense-arena parity) and ``--watermark``
                              sets the free-block admission reserve
 
-``--ragged`` draws variable prompt/response lengths so the schedulers
-can be compared on the distribution that actually matters for serving;
-``--chat`` drops into a toy conversation loop using the byte tokenizer.
-See ``docs/serving.md`` for the full tuning guide.
+``--requests`` is either a COUNT (synthetic workload; ``--ragged`` draws
+variable prompt/response lengths) or a PATH to a JSONL file with one
+request per line and per-request sampling fields::
+
+    {"prompt": "Hello", "max_new_tokens": 16, "temperature": 0.7,
+     "top_p": 0.9, "seed": 1}
+    {"tokens": [1, 2, 3], "max_new_tokens": 8, "top_k": 40, "eos_id": 0}
+
+(every sampling field optional — omitted fields fall back to the engine
+defaults from ``--temperature`` / ``--top-k`` / ``--top-p`` /
+``--eos-id``; heterogeneous lines share ONE compiled decode graph).
+``--chat`` drops into a toy conversation loop that streams tokens from
+the core as they decode.  See ``docs/serving.md`` for the tuning guide.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
+from collections import deque
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.data import ByteTokenizer
 from repro.models import transformer as T
-from repro.serving.engine import GenerationEngine, Request
+from repro.serving.engine import GenerationEngine, Request, SamplingParams
 from repro.training import checkpoint
 
 
 def build_requests(args, cfg, rng) -> list:
+    """Synthetic workload: ``--requests N`` random prompts."""
     reqs = []
-    for i in range(args.requests):
+    for i in range(int(args.requests)):
         if args.ragged:
             lp = int(rng.integers(max(2, args.prompt_len // 4),
                                   args.prompt_len + 1))
@@ -56,40 +72,98 @@ def build_requests(args, cfg, rng) -> list:
     return reqs
 
 
-def run_fixed(engine, params, reqs, key, batch, lp):
-    """Baseline scheduler: pad every prompt to the global max ``lp``,
-    decode all of them to the global max_new (early exit only once the
-    whole batch is done)."""
-    done_tokens = scheduled = 0
-    t0 = time.perf_counter()
-    for i in range(0, len(reqs), batch):
-        group = reqs[i:i + batch]
-        # always dispatch full batches (fixed shapes => one compile);
-        # filler rows don't count toward useful tokens
-        padded = np.zeros((batch, lp), np.int32)
-        for j, r in enumerate(group):
-            padded[j, lp - len(r.tokens):] = r.tokens      # left-align end
-        key, sub = jax.random.split(key)
-        out = engine.generate(params, jnp.asarray(padded), sub)
-        mask = np.asarray(out["response_mask"])
-        # only tokens within each request's budget count as useful work
-        done_tokens += int(sum(
-            min(int(mask[j].sum()), r.max_new_tokens)
-            for j, r in enumerate(group)))
-        scheduled += engine.last_stats["scheduled_tokens"]
-    return done_tokens, scheduled, time.perf_counter() - t0
+def load_requests(path: str, cfg, tok: ByteTokenizer,
+                  default_max_new: int) -> list:
+    """JSONL workload: one request per line, ``prompt`` (text) or
+    ``tokens`` (id list) plus optional ``max_new_tokens`` and per-request
+    sampling fields (``temperature``, ``top_k``, ``top_p``, ``seed``,
+    ``eos_id``)."""
+    reqs = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            if "tokens" in d:
+                toks = np.clip(np.asarray(d["tokens"], np.int32), 0,
+                               cfg.vocab_size - 1)
+            else:
+                toks = np.minimum(tok.encode(d["prompt"]),
+                                  cfg.vocab_size - 1)
+            sp = SamplingParams(
+                temperature=d.get("temperature"),
+                top_k=d.get("top_k"),
+                top_p=d.get("top_p"),
+                seed=d.get("seed"),
+                **({"eos_id": d["eos_id"]} if "eos_id" in d else {}))
+            reqs.append(Request(
+                uid=d.get("uid", i), tokens=toks,
+                max_new_tokens=d.get("max_new_tokens", default_max_new),
+                params=sp))
+    return reqs
 
 
-def run_continuous(engine, params, reqs, key, slots, S, *,
-                   num_blocks=None, watermark=None):
+def run_schedule(engine, params, reqs, key, *, mode: str, slots: int,
+                 max_seq_len: int, num_blocks=None, watermark=None):
+    """The one drain loop both schedulers share: feed the core, step it,
+    count finished tokens from the event stream.  ``continuous`` queues
+    every request up front; ``fixed`` feeds slot-sized waves and starts
+    the next wave only when the core goes idle."""
+    core = engine.core(params, key, slots=slots, max_seq_len=max_seq_len,
+                       num_blocks=num_blocks, watermark=watermark)
+    pending = deque(reqs)
+    counts: dict = {}
+    done_tokens = 0
     t0 = time.perf_counter()
-    kw = {}
-    if engine.kv_layout == "paged":
-        kw = dict(num_blocks=num_blocks, watermark=watermark)
-    outs = engine.serve(params, reqs, key, slots=slots, max_seq_len=S, **kw)
-    dt = time.perf_counter() - t0
-    return (sum(c.tokens.size for c in outs),
-            engine.last_stats["scheduled_tokens"], dt)
+    while pending or core.has_work():
+        if mode == "continuous":
+            while pending:
+                core.add_request(pending.popleft())
+        elif not core.has_work():
+            for _ in range(min(slots, len(pending))):
+                core.add_request(pending.popleft())
+        for ev in core.step():
+            if ev.preempted:        # streamed tokens discarded, regenerated
+                counts[ev.uid] = 0
+                continue
+            counts[ev.uid] = counts.get(ev.uid, 0) + ev.new_tokens.size
+            if ev.finished:
+                done_tokens += counts.pop(ev.uid, 0)
+    return done_tokens, core.stats(), time.perf_counter() - t0
+
+
+def chat_loop(engine, params, tok: ByteTokenizer, args) -> None:
+    """Toy conversation loop streaming tokens from the core as they
+    decode (one slot, one request per turn).  Replies stop at the byte
+    tokenizer's EOS unless ``--eos-id`` overrides it."""
+    print("chat mode — empty line to exit")
+    S = args.prompt_len + args.max_new
+    eos = (args.eos_id if args.eos_id is not None
+           else min(tok.eos_id, engine.cfg.vocab_size - 1))
+    turn = 0
+    while True:
+        try:
+            text = input("Human: ")
+        except EOFError:
+            break
+        if not text.strip():
+            break
+        ids = np.minimum(tok.encode(text, max_len=args.prompt_len),
+                         engine.cfg.vocab_size - 1).astype(np.int32)
+        core = engine.core(params, jax.random.PRNGKey(args.seed + turn),
+                           slots=1, max_seq_len=S)
+        core.add_request(Request(uid=turn, tokens=ids,
+                                 max_new_tokens=args.max_new,
+                                 params=SamplingParams(eos_id=eos)))
+        print("Assistant: ", end="", flush=True)
+        while core.has_work():
+            for ev in core.step():
+                if ev.new_tokens.size:
+                    sys.stdout.write(tok.decode(ev.new_tokens))
+                    sys.stdout.flush()
+        print()
+        turn += 1
 
 
 def main():
@@ -98,16 +172,18 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--scheduler", choices=["fixed", "continuous"],
                     default="continuous")
-    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--requests", default="16",
+                    help="request COUNT (synthetic workload) or PATH to "
+                         "a JSONL file with per-request sampling fields")
     ap.add_argument("--batch", type=int, default=4,
-                    help="fixed-scheduler batch / continuous slots")
+                    help="fixed-scheduler wave size / continuous slots")
     ap.add_argument("--ragged", action="store_true")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--kv-layout", choices=["dense", "paged"],
                     default="dense",
-                    help="continuous-scheduler KV layout: fixed arena or "
+                    help="KV layout behind the core: fixed arena or "
                          "block-pooled paged cache")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged: tokens per KV block")
@@ -120,15 +196,12 @@ def main():
                          "running slot)")
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--chat", action="store_true")
     args = ap.parse_args()
-    if args.kv_layout != "dense" and (args.scheduler == "fixed"
-                                      or args.chat):
-        ap.error("--kv-layout paged requires --scheduler continuous "
-                 "(the fixed/chat path decodes a dense batch cache)")
     if args.kv_layout == "dense" and (args.num_blocks is not None
                                       or args.watermark is not None):
         ap.error("--num-blocks/--watermark require --kv-layout paged")
@@ -143,58 +216,36 @@ def main():
         print("loaded", args.ckpt)
 
     tok = ByteTokenizer()
+    engine = GenerationEngine(cfg, max_new_tokens=args.max_new,
+                              temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p,
+                              eos_id=args.eos_id, chunk=args.chunk,
+                              kv_layout=args.kv_layout,
+                              block_size=args.block_size)
     if args.chat:
-        eos = min(tok.eos_id, cfg.vocab_size - 1)
-        engine = GenerationEngine(cfg, max_new_tokens=args.max_new,
-                                  temperature=args.temperature,
-                                  top_k=args.top_k, eos_id=eos,
-                                  chunk=args.chunk)
-        print("chat mode — empty line to exit")
-        while True:
-            try:
-                text = input("Human: ")
-            except EOFError:
-                break
-            if not text.strip():
-                break
-            ids = tok.encode(text, max_len=args.prompt_len)[None]
-            ids = np.minimum(ids, cfg.vocab_size - 1)
-            out = engine.generate(params, jnp.asarray(ids), key)
-            resp = np.asarray(out["sequences"][0, args.prompt_len:])
-            n = int(out["response_mask"][0].sum())
-            print("Assistant:", tok.decode(resp[:n]))
+        chat_loop(engine, params, tok, args)
         return
 
     rng = np.random.default_rng(args.seed)
-    reqs = build_requests(args, cfg, rng)
-    engine = GenerationEngine(cfg, max_new_tokens=args.max_new,
-                              temperature=args.temperature,
-                              top_k=args.top_k, eos_id=args.eos_id,
-                              chunk=args.chunk, kv_layout=args.kv_layout,
-                              block_size=args.block_size)
-    # warmup/compile on a prefix of the queue, at the measured shapes
-    lp = max(len(r.tokens) for r in reqs)
-    S = lp + args.max_new
-    warm = reqs[:min(len(reqs), args.batch)]
-    pool_kw = dict(num_blocks=args.num_blocks, watermark=args.watermark)
-    if args.scheduler == "continuous":
-        run_continuous(engine, params, warm, key, args.batch, S, **pool_kw)
-        n_tok, scheduled, dt = run_continuous(
-            engine, params, reqs, jax.random.PRNGKey(args.seed + 1),
-            args.batch, S, **pool_kw)
+    if str(args.requests).isdigit():
+        reqs = build_requests(args, cfg, rng)
     else:
-        run_fixed(engine, params, warm, key, args.batch, lp)
-        n_tok, scheduled, dt = run_fixed(
-            engine, params, reqs, jax.random.PRNGKey(args.seed + 1),
-            args.batch, lp)
-    util = n_tok / max(scheduled, 1)
+        reqs = load_requests(args.requests, cfg, tok, args.max_new)
+    # warmup/compile on a prefix of the queue, at the measured shapes
+    S = max(len(r.tokens) + engine.resolve(r)[3] for r in reqs)
+    warm = reqs[:min(len(reqs), args.batch)]
+    sched_kw = dict(mode=args.scheduler, slots=args.batch, max_seq_len=S,
+                    num_blocks=args.num_blocks, watermark=args.watermark)
+    run_schedule(engine, params, warm, key, **sched_kw)
+    n_tok, stats, dt = run_schedule(
+        engine, params, reqs, jax.random.PRNGKey(args.seed + 1), **sched_kw)
+    util = n_tok / max(stats["scheduled_tokens"], 1)
     extra = ""
-    if args.scheduler == "continuous" and args.kv_layout == "paged":
-        st = engine.last_stats
-        extra = (f"  [paged: blocks={st['num_blocks']} "
-                 f"hwm={st['block_high_water']} "
-                 f"preempt={st['preemptions']} "
-                 f"mean_conc={st['mean_concurrency']:.1f}]")
+    if args.kv_layout == "paged":
+        extra = (f"  [paged: blocks={stats['num_blocks']} "
+                 f"hwm={stats['block_high_water']} "
+                 f"preempt={stats['preemptions']} "
+                 f"mean_conc={stats['mean_concurrency']:.1f}]")
     print(f"scheduler={args.scheduler}  kv={args.kv_layout}  "
           f"requests={len(reqs)}  "
           f"generated {n_tok} tokens in {dt:.3f}s  ({n_tok / dt:.1f} tok/s, "

@@ -1,7 +1,9 @@
-from repro.serving.engine import Completion, GenerationEngine, Request
+from repro.serving.engine import (Completion, EngineCore, GenerationEngine,
+                                  Request, SamplingParams, StepEvent)
 from repro.serving.generate import (decode_scan_step, decode_step, generate,
                                     prefill)
-from repro.serving.sampling import sample
+from repro.serving.sampling import sample, sample_rows
 
-__all__ = ["Completion", "GenerationEngine", "Request", "decode_scan_step",
-           "decode_step", "generate", "prefill", "sample"]
+__all__ = ["Completion", "EngineCore", "GenerationEngine", "Request",
+           "SamplingParams", "StepEvent", "decode_scan_step", "decode_step",
+           "generate", "prefill", "sample", "sample_rows"]

@@ -35,7 +35,9 @@ Design notes:
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Sequence
+
+import numpy as np
 
 TRASH_BLOCK = 0
 
@@ -126,3 +128,56 @@ class BlockAllocator:
                 raise ValueError(f"double/invalid free of block {i}")
             self._free.append(i)
             self._free_set.add(i)
+
+
+class BlockTables:
+    """Per-slot block-table bookkeeping over a :class:`BlockAllocator`.
+
+    The host-side source of truth for which pool blocks each KV slot
+    owns: ``table`` is the dense ``(slots, nbmax)`` int32 array the
+    serving engine uploads as the paged decode chunk's ``block_tables``
+    argument (rows padded with :data:`TRASH_BLOCK`, which absorbs
+    out-of-prefix writes), and ``blocks[slot]`` is the exact allocated
+    prefix.  All alloc/free traffic for slot lifetimes flows through
+    :meth:`assign` / :meth:`grow` / :meth:`release`, so the allocator's
+    free list and the device tables can never disagree.
+    """
+
+    def __init__(self, alloc: BlockAllocator, slots: int, nbmax: int):
+        self.alloc = alloc
+        self.nbmax = int(nbmax)
+        self.table = np.full((slots, nbmax), TRASH_BLOCK, np.int32)
+        self.blocks: List[List[int]] = [[] for _ in range(slots)]
+
+    def num_blocks(self, slot: int) -> int:
+        return len(self.blocks[slot])
+
+    def assign(self, slot: int, ids: Sequence[int]) -> None:
+        """Install a fresh admission's prompt blocks (replaces any
+        previous row — the caller must have released it first)."""
+        self.table[slot, :] = TRASH_BLOCK
+        self.table[slot, :len(ids)] = ids
+        self.blocks[slot] = list(ids)
+
+    def grow(self, slot: int, want: int) -> bool:
+        """Extend slot ``slot`` to at least ``want`` blocks.  All-or-
+        nothing: returns False (and changes nothing) if the pool cannot
+        supply the remainder — the engine then preempts and retries."""
+        need = want - len(self.blocks[slot])
+        if need <= 0:
+            return True
+        got = self.alloc.alloc(need)
+        if got is None:
+            return False
+        n0 = len(self.blocks[slot])
+        self.table[slot, n0:n0 + len(got)] = got
+        self.blocks[slot].extend(got)
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return every block slot ``slot`` owns to the pool and reset
+        its table row to all-trash (idempotent)."""
+        if self.blocks[slot]:
+            self.alloc.free(self.blocks[slot])
+            self.blocks[slot] = []
+        self.table[slot, :] = TRASH_BLOCK

@@ -1,31 +1,46 @@
-"""Serving-grade generation engine: early-exit decode + continuous batching.
+"""Serving-grade generation: early-exit decode + a stepwise request core.
 
 The paper's Fig. 5 point is that RLHF stage-3 *experience generation*
 dominates end-to-end time; the Hybrid Engine makes each decode step cheap
-by resharding once per phase.  This module attacks the two remaining
-sources of waste that a fixed-shape :func:`repro.serving.generate.generate`
-cannot avoid:
+by resharding once per phase.  This module attacks the waste a fixed-shape
+:func:`repro.serving.generate.generate` cannot avoid, and exposes the
+result as a request-level serving API:
 
-1. **Early-exit decode** (``GenerationEngine.generate``): the decode scan
-   is chunked into ``chunk``-token segments dispatched from the host.
-   After each segment the (tiny) ``done`` vector is inspected and no
-   further segments are dispatched once every sequence has emitted EOS —
-   a batch that finishes at 40 tokens no longer pays for 256.  The token
-   stream is *bit-identical* to ``generate`` (same
+1. **Early-exit decode** (:meth:`GenerationEngine.generate`): the decode
+   scan is chunked into ``chunk``-token segments dispatched from the
+   host.  After each segment the (tiny) ``done`` vector is inspected and
+   no further segments are dispatched once every sequence has emitted
+   EOS — a batch that finishes at 40 tokens no longer pays for 256.  The
+   token stream is *bit-identical* to ``generate`` (same
    :func:`repro.serving.generate.decode_scan_step` body, same PRNG-split
    sequence), so PPO sees exactly the sequences the reference path would
    have produced.
 
-2. **Continuous batching** (``GenerationEngine.serve``): a slot-based
-   scheduler admits variable-length prompts from a queue into a
-   ``slots``-wide KV cache.  Each slot carries its own absolute
-   position, stop limit and done flag; when a sequence hits EOS (or its
-   per-request ``max_new_tokens``) its slot is harvested at the next
-   chunk boundary and refilled from the queue, so the batch stays full
-   under ragged prompt/response length distributions instead of padding
-   every request to the batch maximum.
+2. **Stepwise continuous batching** (:class:`EngineCore`): the vLLM-style
+   ``add_request() / step()`` engine core.  A slot-based scheduler admits
+   variable-length prompts into a ``slots``-wide KV cache; each slot
+   carries its own absolute position, stop limit, *sampling parameters*
+   and done flag.  ``step()`` runs one fused ``chunk``-step decode and
+   returns :class:`StepEvent`\\ s — the newly decoded tokens per request,
+   finishes (``"eos" | "length" | "cancelled"``) and preemptions — so a
+   frontend can stream tokens as they decode and ``cancel()`` requests
+   mid-flight (slot and KV blocks are reclaimed at the next chunk
+   boundary).  :meth:`GenerationEngine.serve` remains as a thin
+   drain-the-queue wrapper over the core with token streams identical to
+   the historical batch-synchronous API.
 
-The KV cache behind ``serve`` comes in two layouts (``kv_layout``):
+Per-request sampling is *vectorized inside the jitted chunk*: the decode
+graph threads ``(slots,)`` temperature / top-k / top-p / EOS tensors and
+a per-slot PRNG-key lane through :func:`repro.serving.sampling.sample_rows`,
+so one compiled graph serves heterogeneously-sampled requests (greedy
+next to nucleus next to seeded) with zero retracing.  Requests without a
+``seed`` draw from the engine's shared per-step key exactly as before —
+homogeneous workloads are bit-identical to the pre-core engine — while a
+seeded request draws from its own ``PRNGKey(seed)`` split chain, making
+its stream reproducible independent of batch composition.
+
+The KV cache behind the core comes in two layouts (``kv_layout``), which
+are *cache backends* behind the same scheduling loop:
 
 - ``"dense"`` — a fixed ``(slots, S)`` arena: every slot reserves
   ``max_seq_len`` KV rows for its whole lifetime.  Simple, and the
@@ -36,10 +51,10 @@ The KV cache behind ``serve`` comes in two layouts (``kv_layout``):
   RLHF generation phase).  A slot holds only the blocks its tokens
   occupy: prompt blocks are allocated and scattered at admission,
   decode-time blocks are appended at chunk boundaries, and all of a
-  slot's blocks return to the pool when it is harvested.  At an equal
-  KV-HBM budget this admits ~``max_len / mean_len`` times more
-  concurrent sequences on ragged traffic.  Admission control becomes
-  "free slot AND enough free blocks for the prompt, leaving a
+  slot's blocks return to the pool when it is harvested (or cancelled).
+  At an equal KV-HBM budget this admits ~``max_len / mean_len`` times
+  more concurrent sequences on ragged traffic.  Admission control
+  becomes "free slot AND enough free blocks for the prompt, leaving a
   ``watermark`` reserve"; if a decode-time append still finds the pool
   empty, the newest slot is preempted (blocks freed, request requeued
   at the queue front for full re-generation) so the oldest sequences
@@ -70,7 +85,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Set
 
 import jax
 import jax.numpy as jnp
@@ -78,17 +93,59 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ATTN, ModelConfig
-from repro.serving.block_pool import TRASH_BLOCK, BlockAllocator, blocks_for
+from repro.serving.block_pool import (TRASH_BLOCK, BlockAllocator,
+                                      BlockTables, blocks_for)
 from repro.serving.generate import decode_scan_step, decode_step, prefill
-from repro.serving.sampling import sample
+from repro.serving.sampling import sample, sample_rows
+
+
+class _Unset:
+    """Sentinel distinguishing "not set, use the engine default" from an
+    explicit ``None`` (e.g. ``eos_id=None`` = never stop on a token)."""
+    def __repr__(self):
+        return "<unset>"
+
+
+UNSET = _Unset()
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.  Every field defaults to "use
+    the engine default", so ``SamplingParams()`` reproduces the engine's
+    construction-time behaviour; any mix of configurations runs through
+    one jitted decode graph (the parameters are tensors, not trace
+    constants).
+
+    - ``temperature``: ``<= 0`` is greedy.
+    - ``top_k`` / ``top_p``: ``0`` / ``1.0`` disable the filter.
+    - ``max_new_tokens``: per-request budget override.
+    - ``eos_id``: stop-token override; explicit ``None`` disables
+      stopping on a token for this request even when the engine has an
+      EOS configured.
+    - ``seed``: when set, the request samples from its own
+      ``PRNGKey(seed)`` split chain — its stream is reproducible
+      regardless of what else is in the batch or when it was admitted.
+      When ``None`` the request draws from the engine's shared per-step
+      key (the historical behaviour; stream depends on batch
+      composition).
+    """
+    temperature: Optional[float] = None
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
+    max_new_tokens: Optional[int] = None
+    eos_id: Any = UNSET
+    seed: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class Request:
-    """One generation request: a variable-length prompt plus its budget."""
+    """One generation request: a variable-length prompt plus its budget
+    and (optional) sampling parameters."""
     uid: int
     tokens: np.ndarray                 # (Lp,) int32 prompt
-    max_new_tokens: int
+    max_new_tokens: Optional[int] = None
+    params: SamplingParams = SamplingParams()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,7 +153,34 @@ class Completion:
     uid: int
     prompt: np.ndarray                 # (Lp,) int32
     tokens: np.ndarray                 # generated tokens, EOS included
-    finished_by_eos: bool
+    finish_reason: str                 # "eos" | "length" | "cancelled"
+
+    @property
+    def finished_by_eos(self) -> bool:
+        """Compat shim for the pre-``finish_reason`` API (one release)."""
+        return self.finish_reason == "eos"
+
+
+_NO_TOKENS = np.zeros((0,), np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepEvent:
+    """One per-request occurrence at a chunk boundary.
+
+    - ``new_tokens``: tokens decoded for this request during the step
+      (empty for pure state changes).
+    - ``finished`` + ``finish_reason``: the request completed; its slot
+      (and blocks) are already reclaimed.
+    - ``preempted``: the paged pool ran dry and this request was evicted
+      and requeued at the queue front — every token previously streamed
+      for it is invalid and will be regenerated from scratch.
+    """
+    uid: int
+    new_tokens: np.ndarray = _NO_TOKENS
+    finished: bool = False
+    finish_reason: Optional[str] = None
+    preempted: bool = False
 
 
 def _next_bucket(n: int, lo: int = 8) -> int:
@@ -106,22 +190,37 @@ def _next_bucket(n: int, lo: int = 8) -> int:
     return b
 
 
+@dataclasses.dataclass
+class _Active:
+    """Host-side state of one occupied slot."""
+    req: Request
+    max_new: int
+    eos: Optional[int]
+    toks: List[int] = dataclasses.field(default_factory=list)
+
+
 class GenerationEngine:
     """Engine for PPO experience generation and the serve launcher.
 
-    Sampling config is fixed at construction (it is baked into the jitted
-    decode graphs); params are passed per call so the Hybrid Engine can
-    hand in freshly resharded actor weights every PPO iteration.
+    Construction-time sampling settings are *defaults*: the fixed-batch
+    :meth:`generate` path bakes them into its jitted decode graphs (the
+    PPO hot loop), while the request-level core resolves them per request
+    against each :class:`SamplingParams` and threads them through the
+    chunk graph as tensors.  Params are passed per call so the Hybrid
+    Engine can hand in freshly resharded actor weights every PPO
+    iteration.
     """
 
     def __init__(self, cfg: ModelConfig, *, max_new_tokens: int,
                  temperature: float = 1.0, top_k: int = 0,
-                 eos_id: Optional[int] = None, chunk: int = 32,
-                 kv_layout: str = "dense", block_size: int = 16):
+                 top_p: float = 1.0, eos_id: Optional[int] = None,
+                 chunk: int = 32, kv_layout: str = "dense",
+                 block_size: int = 16):
         self.cfg = cfg
         self.max_new_tokens = int(max_new_tokens)
         self.temperature = float(temperature)
         self.top_k = int(top_k)
+        self.top_p = float(top_p)
         self.eos_id = eos_id
         self.chunk = max(1, int(chunk))
         if kv_layout not in ("dense", "paged"):
@@ -150,17 +249,20 @@ class GenerationEngine:
         # arena, logits, pos, done, limit)
         self._admit_fn = jax.jit(self._admit_impl,
                                  donate_argnums=(5, 6, 7, 8, 9))
-        # (params, logits, arena, key, pos, done, limit) — limit is NOT
-        # donated: it is reused across chunks until the next admit
+        # (params, logits, arena, key, slot_keys, pos, done, limit, temp,
+        # top_k, top_p, own_key, eos) — the whole decode carry (logits,
+        # arena, key, slot_keys, pos, done) is donated and rebound every
+        # dispatch; the per-slot sampling tensors ride along un-donated
+        # (re-uploaded from host truth, they only change at admission)
         self._serve_chunk_fn = jax.jit(self._serve_chunk_impl,
-                                       donate_argnums=(1, 2, 4, 5))
-        # paged variants: retrace per (bucket, prompt-block-count) shape;
-        # block tables ride along un-donated (re-uploaded from the host
-        # allocator's truth each dispatch)
+                                       donate_argnums=(1, 2, 3, 4, 5, 6))
+        # paged variants: admit retraces per (bucket, prompt-block-count)
+        # shape; block tables ride along un-donated (re-uploaded from the
+        # host allocator's truth each dispatch)
         self._admit_paged_fn = jax.jit(self._admit_paged_impl,
                                        donate_argnums=(6, 7, 8, 9, 10))
         self._paged_chunk_fn = jax.jit(self._paged_chunk_impl,
-                                       donate_argnums=(1, 2, 3, 4, 5))
+                                       donate_argnums=(1, 2, 3, 4, 5, 6))
 
     # ================================================================ #
     # fixed-batch path with early exit (PPO experience generation)
@@ -177,7 +279,7 @@ class GenerationEngine:
             def fn(params, logits, cache, key, pos, done, encoder_embeds):
                 step = decode_scan_step(
                     self.cfg, params, temperature=self.temperature,
-                    top_k=self.top_k, eos_id=self.eos_id,
+                    top_k=self.top_k, top_p=self.top_p, eos_id=self.eos_id,
                     encoder_embeds=encoder_embeds)
                 carry, (toks, was) = jax.lax.scan(
                     step, (logits, cache, key, pos, done), None, length=n)
@@ -243,7 +345,7 @@ class GenerationEngine:
                 "response_mask": jnp.asarray(mask)}
 
     # ================================================================ #
-    # continuous batching over a slot arena
+    # admission bodies shared by both KV layouts
     # ================================================================ #
     def _prefill_row(self, params, tokens, length, row):
         """Shared admission body for both KV layouts: prefill one padded
@@ -281,149 +383,6 @@ class GenerationEngine:
         return (arena,) + self._slot_reset(slot, logit, length, max_new,
                                            logits_buf, pos, done, limit)
 
-    def _serve_step(self, params, limit, block_tables=None):
-        """Scan body shared by the dense and paged serve chunks: same
-        sampler, PRNG-split sequence and stop logic, so the two layouts
-        emit identical token streams given identical admission order."""
-        cfg = self.cfg
-        pad_tok = self.eos_id if self.eos_id is not None else 0
-
-        def step(carry, _):
-            logits, cache, key, pos, done = carry
-            key, sub = jax.random.split(key)
-            tok = sample(logits, sub, temperature=self.temperature,
-                         top_k=self.top_k)
-            tok = jnp.where(done, pad_tok, tok)
-            logits, cache = decode_step(cfg, params, tok, cache, pos,
-                                        block_tables=block_tables)
-            new_done = done | (pos + 1 >= limit)
-            if self.eos_id is not None:
-                new_done = new_done | (tok == self.eos_id)
-            return (logits, cache, key, pos + 1, new_done), (tok, done)
-
-        return step
-
-    def _serve_chunk_impl(self, params, logits, arena, key, pos, done,
-                          limit):
-        """``chunk`` decode steps over the whole arena.  Same body as
-        :func:`decode_scan_step` plus the per-slot stop limit (absolute
-        position ``prompt_len + max_new_tokens``)."""
-        step = self._serve_step(params, limit)
-        carry, (toks, was) = jax.lax.scan(
-            step, (logits, arena, key, pos, done), None, length=self.chunk)
-        return carry, toks, was
-
-    def serve(self, params, requests: Sequence[Request], key, *,
-              slots: int = 8, max_seq_len: Optional[int] = None,
-              num_blocks: Optional[int] = None,
-              watermark: Optional[int] = None) -> List[Completion]:
-        """Run a queue of ragged requests through a ``slots``-wide batch.
-
-        Free slots are refilled at chunk boundaries, so each admitted
-        sequence decodes alongside whatever else is in flight — the
-        continuous-batching scheduler of vLLM/OpenRLHF at chunk
-        granularity.  Per-sequence outputs are independent of batch
-        composition (each slot attends only its own cache rows), so greedy
-        results are identical to running each request alone.
-
-        With ``kv_layout="paged"``, ``num_blocks`` sizes the shared block
-        pool (default: dense-arena parity, ``slots * ceil(S / block_size)``
-        usable blocks) and ``watermark`` is the free-block reserve kept by
-        admission control (default: dynamic — one chunk's worth of decode
-        appends per currently-running slot,
-        ``n_active * ceil(chunk / block_size)``).  Both are rejected for
-        the dense layout.
-        """
-        if self.kv_layout == "paged":
-            return self._serve_paged(params, requests, key, slots=slots,
-                                     max_seq_len=max_seq_len,
-                                     num_blocks=num_blocks,
-                                     watermark=watermark)
-        if num_blocks is not None or watermark is not None:
-            raise ValueError("num_blocks/watermark require kv_layout='paged'")
-        cfg = self.cfg
-        if cfg.arch_type == "vlm" or not cfg.embed_inputs:
-            raise NotImplementedError(
-                "continuous batching supports token-input decoder LMs")
-        queue = deque(requests)
-        need = max((len(r.tokens) + r.max_new_tokens for r in requests),
-                   default=1)
-        S = max_seq_len or need
-        if need > S:
-            raise ValueError(f"max_seq_len={S} < longest request ({need})")
-
-        arena = T.init_cache(cfg, slots, S)
-        key = jnp.array(key, copy=True)    # chunk fns donate the key
-        logits = jnp.zeros((slots, cfg.vocab_size), jnp.float32)
-        pos = jnp.zeros((slots,), jnp.int32)
-        done = jnp.ones((slots,), bool)
-        limit = jnp.zeros((slots,), jnp.int32)
-        slot_req: List[Optional[Request]] = [None] * slots
-        slot_toks: List[List[int]] = [[] for _ in range(slots)]
-        out: List[Completion] = []
-        admitted = chunks = 0
-
-        while queue or any(r is not None for r in slot_req):
-            for b in range(slots):
-                if slot_req[b] is None and queue:
-                    r = None
-                    while queue:                 # zero-budget: trivially done
-                        cand = queue.popleft()
-                        if cand.max_new_tokens > 0:
-                            r = cand
-                            break
-                        out.append(Completion(
-                            uid=cand.uid, prompt=np.asarray(cand.tokens),
-                            tokens=np.zeros((0,), np.int32),
-                            finished_by_eos=False))
-                    if r is None:
-                        continue
-                    Lp = len(r.tokens)
-                    Lb = Lp if self._exact_prefill else min(
-                        _next_bucket(Lp), S)
-                    padded = np.zeros((1, Lb), np.int32)
-                    padded[0, :Lp] = np.asarray(r.tokens, np.int32)
-                    arena, logits, pos, done, limit = self._admit_fn(
-                        params, jnp.asarray(padded),
-                        jnp.int32(Lp), jnp.int32(r.max_new_tokens),
-                        jnp.int32(b), arena, logits, pos, done, limit)
-                    slot_req[b], slot_toks[b] = r, []
-                    admitted += 1
-            if not any(r is not None for r in slot_req):
-                break                            # queue drained, all idle
-            (logits, arena, key, pos, done), toks, was = \
-                self._serve_chunk_fn(params, logits, arena, key, pos, done,
-                                     limit)
-            chunks += 1
-            toks_h, was_h = np.asarray(toks), np.asarray(was)
-            done_h = np.asarray(done)
-            for b in range(slots):
-                if slot_req[b] is None:
-                    continue
-                slot_toks[b].extend(toks_h[~was_h[:, b], b].tolist())
-                if done_h[b]:
-                    r = slot_req[b]
-                    gen = np.asarray(slot_toks[b], np.int32)
-                    by_eos = (self.eos_id is not None and gen.size > 0
-                              and int(gen[-1]) == self.eos_id
-                              and gen.size < r.max_new_tokens)
-                    out.append(Completion(uid=r.uid,
-                                          prompt=np.asarray(r.tokens),
-                                          tokens=gen,
-                                          finished_by_eos=by_eos))
-                    slot_req[b] = None
-        self.last_stats = {
-            "requests": len(out),
-            "admitted": admitted,
-            "decode_steps": chunks * self.chunk,
-            "scheduled_tokens": chunks * self.chunk * slots,
-            "generated_tokens": int(sum(c.tokens.size for c in out)),
-        }
-        return out
-
-    # ================================================================ #
-    # paged continuous batching: block pool + per-slot block tables
-    # ================================================================ #
     def _admit_paged_impl(self, params, tokens, length, max_new, slot,
                           blk_ids, pool, logits_buf, pos, done, limit):
         """Prefill one padded prompt into a fresh dense single-row cache,
@@ -448,215 +407,578 @@ class GenerationEngine:
         return (pool,) + self._slot_reset(slot, logit, length, max_new,
                                           logits_buf, pos, done, limit)
 
-    def _paged_chunk_impl(self, params, logits, pool, key, pos, done,
-                          limit, block_tables):
+    # ================================================================ #
+    # the jitted serve chunk, shared by the dense and paged backends
+    # ================================================================ #
+    def _serve_step(self, params, limit, temp, top_k, top_p, own_key, eos,
+                    block_tables=None):
+        """Scan body shared by the dense and paged chunks: one vectorized
+        sampler over per-slot parameter tensors, one shared PRNG split
+        per step plus a per-slot key lane for seeded requests.  For a
+        homogeneous unseeded batch the emitted stream is identical to the
+        historical scalar-sampler chunk (same splits, same
+        ``categorical`` call on the same filtered logits), so the two KV
+        layouts — and the pre-core engine — emit identical tokens given
+        identical admission order."""
+        cfg = self.cfg
+        pad_tok = jnp.where(eos >= 0, eos, 0).astype(jnp.int32)
+
+        def step(carry, _):
+            logits, cache, key, slot_keys, pos, done = carry
+            key, sub = jax.random.split(key)
+            sk = jax.vmap(jax.random.split)(slot_keys)
+            slot_keys2, subs = sk[:, 0], sk[:, 1]
+            tok_shared = sample_rows(logits, sub, temperature=temp,
+                                     top_k=top_k, top_p=top_p)
+            tok_own = sample_rows(logits, subs, temperature=temp,
+                                  top_k=top_k, top_p=top_p)
+            tok = jnp.where(own_key, tok_own, tok_shared)
+            tok = jnp.where(done, pad_tok, tok)
+            logits, cache = decode_step(cfg, params, tok, cache, pos,
+                                        block_tables=block_tables)
+            new_done = done | (pos + 1 >= limit) | ((eos >= 0) & (tok == eos))
+            return (logits, cache, key, slot_keys2, pos + 1, new_done), \
+                (tok, done)
+
+        return step
+
+    def _serve_chunk_impl(self, params, logits, arena, key, slot_keys, pos,
+                          done, limit, temp, top_k, top_p, own_key, eos):
+        """``chunk`` decode steps over the whole arena with per-slot stop
+        limits (absolute position ``prompt_len + max_new_tokens``) and
+        per-slot sampling tensors.  One compiled graph serves every mix
+        of sampling configurations — the parameters are runtime values,
+        never trace constants."""
+        step = self._serve_step(params, limit, temp, top_k, top_p, own_key,
+                                eos)
+        carry, (toks, was) = jax.lax.scan(
+            step, (logits, arena, key, slot_keys, pos, done), None,
+            length=self.chunk)
+        return carry, toks, was
+
+    def _paged_chunk_impl(self, params, logits, pool, key, slot_keys, pos,
+                          done, limit, temp, top_k, top_p, own_key, eos,
+                          block_tables):
         """``chunk`` decode steps over the slot batch, KV read/written
         through the block tables.  Identical step body (sampler, PRNG
         splits, stop logic) to the dense chunk."""
-        step = self._serve_step(params, limit, block_tables)
+        step = self._serve_step(params, limit, temp, top_k, top_p, own_key,
+                                eos, block_tables)
         carry, (toks, was) = jax.lax.scan(
-            step, (logits, pool, key, pos, done), None, length=self.chunk)
+            step, (logits, pool, key, slot_keys, pos, done), None,
+            length=self.chunk)
         return carry, toks, was
 
-    def _serve_paged(self, params, requests: Sequence[Request], key, *,
-                     slots: int, max_seq_len: Optional[int],
-                     num_blocks: Optional[int], watermark: Optional[int]
-                     ) -> List[Completion]:
-        """Continuous batching over the paged KV layout.
+    # ================================================================ #
+    # request-level API
+    # ================================================================ #
+    def resolve(self, r: Request):
+        """Resolve a request's effective (temperature, top_k, top_p,
+        max_new, eos, seed) against the engine defaults."""
+        p = r.params or SamplingParams()
+        temp = self.temperature if p.temperature is None else p.temperature
+        top_k = self.top_k if p.top_k is None else p.top_k
+        top_p = self.top_p if p.top_p is None else p.top_p
+        if p.max_new_tokens is not None:
+            max_new = p.max_new_tokens
+        elif r.max_new_tokens is not None:
+            max_new = r.max_new_tokens
+        else:
+            max_new = self.max_new_tokens
+        eos = self.eos_id if p.eos_id is UNSET else p.eos_id
+        return float(temp), int(top_k), float(top_p), int(max_new), eos, \
+            p.seed
 
-        Per chunk boundary: harvest finished slots (their blocks return
-        to the pool), admit queued requests while the watermark holds,
-        top up every active slot's block table to cover the next chunk
-        (preempting the newest slot if the pool runs dry — the oldest
-        sequences always progress, so the scheduler cannot deadlock),
-        then dispatch one fused ``chunk``-step decode.
+    def core(self, params, key, *, slots: int = 8, max_seq_len: int,
+             num_blocks: Optional[int] = None,
+             watermark: Optional[int] = None) -> "EngineCore":
+        """Build a stepwise :class:`EngineCore` bound to ``params``."""
+        return EngineCore(self, params, key, slots=slots,
+                          max_seq_len=max_seq_len, num_blocks=num_blocks,
+                          watermark=watermark)
+
+    def serve(self, params, requests: Sequence[Request], key, *,
+              slots: int = 8, max_seq_len: Optional[int] = None,
+              num_blocks: Optional[int] = None,
+              watermark: Optional[int] = None) -> List[Completion]:
+        """Drain a queue of ragged requests through the stepwise core.
+
+        A thin wrapper over :class:`EngineCore`: every request is queued
+        up front, the core is stepped until idle, and the per-request
+        event streams are assembled into :class:`Completion`\\ s in finish
+        order.  Free slots are refilled at chunk boundaries, so each
+        admitted sequence decodes alongside whatever else is in flight —
+        the continuous-batching scheduler of vLLM/OpenRLHF at chunk
+        granularity.  Per-sequence outputs are independent of batch
+        composition (each slot attends only its own cache rows), so
+        greedy results are identical to running each request alone.
+
+        With ``kv_layout="paged"``, ``num_blocks`` sizes the shared block
+        pool (default: dense-arena parity, ``slots * ceil(S / block_size)``
+        usable blocks) and ``watermark`` is the free-block reserve kept by
+        admission control (default: dynamic — one chunk's worth of decode
+        appends per currently-running slot,
+        ``n_active * ceil(chunk / block_size)``).  Both are rejected for
+        the dense layout.
         """
-        cfg = self.cfg
-        if cfg.arch_type == "vlm" or not cfg.embed_inputs:
-            raise NotImplementedError(
-                "continuous batching supports token-input decoder LMs")
-        bs = self.block_size
-        queue = deque(requests)
-        need = max((len(r.tokens) + r.max_new_tokens for r in requests),
+        if self.kv_layout != "paged" and (num_blocks is not None
+                                          or watermark is not None):
+            raise ValueError("num_blocks/watermark require kv_layout='paged'")
+        need = max((len(r.tokens) + self.resolve(r)[3] for r in requests),
                    default=1)
         S = max_seq_len or need
         if need > S:
             raise ValueError(f"max_seq_len={S} < longest request ({need})")
-        S = -(-S // bs) * bs               # block-aligned virtual length
-        nbmax = S // bs
+        core = self.core(params, key, slots=slots, max_seq_len=S,
+                         num_blocks=num_blocks, watermark=watermark)
+        prompts: Dict[int, np.ndarray] = {}
+        for r in requests:
+            core.add_request(r)
+            prompts[r.uid] = np.asarray(r.tokens)
+        streams: Dict[int, List[int]] = {}
+        out: List[Completion] = []
+        while core.has_work():
+            for ev in core.step():
+                if ev.preempted:
+                    streams[ev.uid] = []       # regenerated from scratch
+                    continue
+                buf = streams.setdefault(ev.uid, [])
+                buf.extend(ev.new_tokens.tolist())
+                if ev.finished:
+                    out.append(Completion(
+                        uid=ev.uid, prompt=prompts[ev.uid],
+                        tokens=np.asarray(streams.pop(ev.uid), np.int32),
+                        finish_reason=ev.finish_reason))
+        self.last_stats = core.stats()
+        return out
+
+
+# ===================================================================== #
+# cache backends: the dense arena and the paged block pool present the
+# same admit / prepare / dispatch / release surface to the core
+# ===================================================================== #
+class _DenseBackend:
+    """Fixed ``(slots, S)`` KV arena: a slot owns ``S`` rows for life, so
+    admission needs nothing beyond a free slot and release is free."""
+
+    def __init__(self, core: "EngineCore"):
+        self.core = core
+        self.cache = T.init_cache(core.cfg, core.slots, core.S)
+
+    def check(self, uid: int, Lp: int, max_new: int) -> None:
+        if Lp + max_new > self.core.S:
+            raise ValueError(
+                f"request {uid} needs {Lp + max_new} KV rows > "
+                f"max_seq_len={self.core.S}")
+
+    def can_admit(self, n_prompt_tokens: int) -> bool:
+        return True
+
+    def admit(self, slot: int, padded, Lp: int, max_new: int) -> None:
+        c, e = self.core, self.core.engine
+        self.cache, c.logits, c.pos, c.done, c.limit = e._admit_fn(
+            c.params, jnp.asarray(padded), jnp.int32(Lp),
+            jnp.int32(max_new), jnp.int32(slot), self.cache, c.logits,
+            c.pos, c.done, c.limit)
+
+    def prepare_chunk(self, events: List[StepEvent]) -> None:
+        pass                                   # nothing to top up
+
+    def dispatch(self):
+        c, e = self.core, self.core.engine
+        (c.logits, self.cache, c.key, c.slot_keys, c.pos, c.done), toks, \
+            was = e._serve_chunk_fn(
+                c.params, c.logits, self.cache, c.key, c.slot_keys, c.pos,
+                c.done, c.limit, *c.sampling_tensors())
+        return toks, was
+
+    def release(self, slot: int) -> None:
+        pass                                   # rows are reused in place
+
+    def stats(self) -> dict:
+        return {}
+
+
+class _PagedBackend:
+    """Block-pooled KV cache: admission allocates prompt blocks under a
+    watermark reserve, every chunk boundary tops tables up to cover the
+    next chunk (preempting the newest slot if the pool runs dry), and
+    release returns a slot's blocks to the pool."""
+
+    def __init__(self, core: "EngineCore", num_blocks: Optional[int],
+                 watermark: Optional[int]):
+        self.core = core
+        e = core.engine
+        bs = e.block_size
+        self.nbmax = core.S // bs
         if num_blocks is None:
-            num_blocks = slots * nbmax + 1     # dense-arena parity + trash
-        alloc = BlockAllocator(num_blocks, bs)
+            num_blocks = core.slots * self.nbmax + 1   # arena parity + trash
+        self.num_blocks = num_blocks
+        self.alloc = BlockAllocator(num_blocks, bs)
+        self.tables = BlockTables(self.alloc, core.slots, self.nbmax)
+        self.watermark = watermark
         # admission reserve: ``watermark`` free blocks, or (default) one
         # chunk's worth of decode appends per *running* slot — a static
         # reserve sized by the slot cap would strangle small pools
-        chunk_blocks = blocks_for(self.chunk, bs)
-        for r in requests:
-            if (r.max_new_tokens > 0
-                    and not alloc.fits(len(r.tokens) + r.max_new_tokens)):
-                raise ValueError(
-                    f"request {r.uid} needs "
-                    f"{alloc.blocks_for(len(r.tokens) + r.max_new_tokens)} "
-                    f"blocks; pool holds {alloc.capacity}")
-
-        pool = T.init_paged_cache(cfg, num_blocks, bs)
-        key = jnp.array(key, copy=True)    # chunk fns donate the key
-        logits = jnp.zeros((slots, cfg.vocab_size), jnp.float32)
-        pos = jnp.zeros((slots,), jnp.int32)
-        done = jnp.ones((slots,), bool)
-        limit = jnp.zeros((slots,), jnp.int32)
-        tables = np.full((slots, nbmax), TRASH_BLOCK, np.int32)  # host truth
-        slot_req: List[Optional[Request]] = [None] * slots
-        slot_toks: List[List[int]] = [[] for _ in range(slots)]
-        slot_blocks: List[List[int]] = [[] for _ in range(slots)]
+        self.chunk_blocks = blocks_for(e.chunk, bs)
+        self.pool = T.init_paged_cache(core.cfg, num_blocks, bs)
         # host mirror of pos/limit: admit sets them and every dispatched
         # chunk advances every slot by exactly ``chunk`` steps, so block
         # top-up never has to sync device state before a dispatch
-        host_pos = [0] * slots
-        host_limit = [0] * slots
-        stamp = [0] * slots                # admission order, newest = max
-        tick = 0
-        out: List[Completion] = []
-        admitted = chunks = preemptions = 0
-        conc: List[int] = []
-        used_samples: List[int] = []
+        self.host_pos = [0] * core.slots
+        self.host_limit = [0] * core.slots
+        self.conc: List[int] = []
+        self.used_samples: List[int] = []
 
-        def release(b: int, *, requeue: bool) -> None:
-            """Return slot ``b``'s blocks to the pool; optionally requeue
-            its request at the queue front (preemption).  The slot's
-            device state keeps decoding garbage into the trash block
-            until the next admission resets it — nothing reads it."""
-            nonlocal preemptions
-            if slot_blocks[b]:
-                alloc.free(slot_blocks[b])
-                slot_blocks[b] = []
-            tables[b, :] = TRASH_BLOCK
-            if requeue and slot_req[b] is not None:
-                queue.appendleft(slot_req[b])
-                preemptions += 1
-            slot_req[b] = None
-            slot_toks[b] = []
+    def check(self, uid: int, Lp: int, max_new: int) -> None:
+        if Lp + max_new > self.core.S:
+            raise ValueError(
+                f"request {uid} needs {Lp + max_new} KV rows > "
+                f"max_seq_len={self.core.S}")
+        if not self.alloc.fits(Lp + max_new):
+            raise ValueError(
+                f"request {uid} needs "
+                f"{self.alloc.blocks_for(Lp + max_new)} blocks; "
+                f"pool holds {self.alloc.capacity}")
 
-        while queue or any(r is not None for r in slot_req):
-            # ---- admit: free slot AND free blocks (watermark holds) ----
-            for b in range(slots):
-                if slot_req[b] is not None or not queue:
-                    continue
-                r = None
-                while queue:                 # zero-budget: trivially done
-                    cand = queue[0]
-                    if cand.max_new_tokens <= 0:
-                        queue.popleft()
-                        out.append(Completion(
-                            uid=cand.uid, prompt=np.asarray(cand.tokens),
-                            tokens=np.zeros((0,), np.int32),
-                            finished_by_eos=False))
-                        continue
-                    # the watermark is waived when nothing is running:
-                    # the reserve protects nobody and waiting would wedge
-                    n_active = sum(s is not None for s in slot_req)
-                    reserve = (watermark if watermark is not None
-                               else n_active * chunk_blocks)
-                    if not alloc.can_admit(len(cand.tokens),
-                                           reserve=reserve,
-                                           ignore_watermark=n_active == 0):
-                        break            # backpressure: head waits
-                    r = queue.popleft()
+    def can_admit(self, n_prompt_tokens: int) -> bool:
+        # the watermark is waived when nothing is running: the reserve
+        # protects nobody and waiting would wedge the scheduler
+        n_active = self.core.n_active
+        reserve = (self.watermark if self.watermark is not None
+                   else n_active * self.chunk_blocks)
+        return self.alloc.can_admit(n_prompt_tokens, reserve=reserve,
+                                    ignore_watermark=n_active == 0)
+
+    def admit(self, slot: int, padded, Lp: int, max_new: int) -> None:
+        c, e = self.core, self.core.engine
+        Lb = padded.shape[1]
+        nbp = -(-Lb // e.block_size)     # static scatter width per bucket
+        ids = self.alloc.alloc(self.alloc.blocks_for(Lp))
+        self.tables.assign(slot, ids)
+        blk_ids = np.full((nbp,), TRASH_BLOCK, np.int32)
+        blk_ids[:len(ids)] = ids
+        self.pool, c.logits, c.pos, c.done, c.limit = e._admit_paged_fn(
+            c.params, jnp.asarray(padded), jnp.int32(Lp),
+            jnp.int32(max_new), jnp.int32(slot), jnp.asarray(blk_ids),
+            self.pool, c.logits, c.pos, c.done, c.limit)
+        self.host_pos[slot] = Lp
+        self.host_limit[slot] = Lp + max_new
+
+    def prepare_chunk(self, events: List[StepEvent]) -> None:
+        """Top up every active slot's block table to cover the next
+        chunk; preempt the newest slot on pool exhaustion (the oldest
+        always progresses, so the scheduler cannot deadlock)."""
+        c = self.core
+        active = [b for b in range(c.slots) if c.active[b] is not None]
+        for b in sorted(active, key=lambda x: c.stamp[x]):
+            if c.active[b] is None:              # preempted this round
+                continue
+            cover = min(self.host_pos[b] + c.engine.chunk,
+                        self.host_limit[b])
+            want = min(self.alloc.blocks_for(cover), self.nbmax)
+            while not self.tables.grow(b, want):
+                # evict the newest sequence overall — possibly the
+                # requester itself, so an older slot is never starved
+                # by a younger one
+                victims = [v for v in range(c.slots)
+                           if c.active[v] is not None]
+                if not victims:      # unreachable: check() bounds demand
+                    raise RuntimeError("paged KV pool exhausted with "
+                                       "no slot to preempt")
+                victim = max(victims, key=lambda v: c.stamp[v])
+                c.release_slot(victim, requeue=True, events=events)
+                if victim == b:
                     break
-                if r is None:
-                    break                # FIFO: never admit past the head
-                Lp = len(r.tokens)
-                Lb = min(_next_bucket(Lp), S)
-                nbp = -(-Lb // bs)       # static scatter width per bucket
-                ids = alloc.alloc(alloc.blocks_for(Lp))
-                tables[b, :] = TRASH_BLOCK
-                tables[b, :len(ids)] = ids
-                slot_blocks[b] = list(ids)
-                blk_ids = np.full((nbp,), TRASH_BLOCK, np.int32)
-                blk_ids[:len(ids)] = ids
-                padded = np.zeros((1, Lb), np.int32)
-                padded[0, :Lp] = np.asarray(r.tokens, np.int32)
-                pool, logits, pos, done, limit = self._admit_paged_fn(
-                    params, jnp.asarray(padded), jnp.int32(Lp),
-                    jnp.int32(r.max_new_tokens), jnp.int32(b),
-                    jnp.asarray(blk_ids), pool, logits, pos, done, limit)
-                slot_req[b], slot_toks[b] = r, []
-                host_pos[b] = Lp
-                host_limit[b] = Lp + r.max_new_tokens
-                tick += 1
-                stamp[b] = tick
-                admitted += 1
-            active = [b for b in range(slots) if slot_req[b] is not None]
-            if not active:
-                break                    # queue drained, all idle
-            # ---- top up tables to cover the next chunk; preempt the ----
-            # newest slot on pool exhaustion (oldest always progresses)
-            for b in sorted(active, key=lambda x: stamp[x]):
-                if slot_req[b] is None:          # preempted this round
-                    continue
-                cover = min(host_pos[b] + self.chunk, host_limit[b])
-                want = min(alloc.blocks_for(cover), nbmax)
-                while len(slot_blocks[b]) < want:
-                    got = alloc.alloc(want - len(slot_blocks[b]))
-                    if got is not None:
-                        n0 = len(slot_blocks[b])
-                        tables[b, n0:n0 + len(got)] = got
-                        slot_blocks[b].extend(got)
-                        break
-                    # evict the newest sequence overall — possibly the
-                    # requester itself, so an older slot is never starved
-                    # by a younger one
-                    victims = [v for v in range(slots)
-                               if slot_req[v] is not None]
-                    if not victims:      # unreachable: fits() was checked
-                        raise RuntimeError("paged KV pool exhausted with "
-                                           "no slot to preempt")
-                    victim = max(victims, key=lambda v: stamp[v])
-                    release(victim, requeue=True)
-                    if victim == b:
-                        break
-            active = [b for b in range(slots) if slot_req[b] is not None]
-            conc.append(len(active))
-            used_samples.append(alloc.num_used)
-            # ---- one fused chunk over the slot batch ----
-            (logits, pool, key, pos, done), toks, was = \
-                self._paged_chunk_fn(params, logits, pool, key, pos, done,
-                                     limit, jnp.asarray(tables))
-            chunks += 1
-            for b in range(slots):
-                host_pos[b] += self.chunk
-            toks_h, was_h = np.asarray(toks), np.asarray(was)
-            done_h = np.asarray(done)
-            for b in range(slots):
-                if slot_req[b] is None:
-                    continue
-                slot_toks[b].extend(toks_h[~was_h[:, b], b].tolist())
-                if done_h[b]:
-                    r = slot_req[b]
-                    gen = np.asarray(slot_toks[b], np.int32)
-                    by_eos = (self.eos_id is not None and gen.size > 0
-                              and int(gen[-1]) == self.eos_id
-                              and gen.size < r.max_new_tokens)
-                    out.append(Completion(uid=r.uid,
-                                          prompt=np.asarray(r.tokens),
-                                          tokens=gen,
-                                          finished_by_eos=by_eos))
-                    slot_req[b] = None
-                    release(b, requeue=False)    # blocks back to the pool
-        self.last_stats = {
-            "requests": len(out),
-            "admitted": admitted,            # includes re-admissions
-            "decode_steps": chunks * self.chunk,
-            "scheduled_tokens": chunks * self.chunk * slots,
-            "generated_tokens": int(sum(c.tokens.size for c in out)),
-            "preemptions": preemptions,
-            "max_concurrency": max(conc, default=0),
-            "mean_concurrency": float(np.mean(conc)) if conc else 0.0,
+
+    def dispatch(self):
+        c, e = self.core, self.core.engine
+        self.conc.append(c.n_active)
+        self.used_samples.append(self.alloc.num_used)
+        (c.logits, self.pool, c.key, c.slot_keys, c.pos, c.done), toks, \
+            was = e._paged_chunk_fn(
+                c.params, c.logits, self.pool, c.key, c.slot_keys, c.pos,
+                c.done, c.limit, *c.sampling_tensors(),
+                jnp.asarray(self.tables.table))
+        for b in range(c.slots):
+            self.host_pos[b] += e.chunk
+        return toks, was
+
+    def release(self, slot: int) -> None:
+        self.tables.release(slot)
+
+    def stats(self) -> dict:
+        bs = self.core.engine.block_size
+        return {
+            "preemptions": self.core.preemptions,
+            "max_concurrency": max(self.conc, default=0),
+            "mean_concurrency": (float(np.mean(self.conc))
+                                 if self.conc else 0.0),
             "block_size": bs,
-            "num_blocks": num_blocks,
-            "block_high_water": alloc.high_water,
-            "mean_blocks_used": (float(np.mean(used_samples))
-                                 if used_samples else 0.0),
-            "kv_budget_tokens": alloc.capacity * bs,
+            "num_blocks": self.num_blocks,
+            "block_high_water": self.alloc.high_water,
+            "mean_blocks_used": (float(np.mean(self.used_samples))
+                                 if self.used_samples else 0.0),
+            "kv_budget_tokens": self.alloc.capacity * bs,
         }
-        return out
+
+
+# ===================================================================== #
+# the stepwise core
+# ===================================================================== #
+class EngineCore:
+    """Stepwise request-level serving core.
+
+    The slot/admission/harvest loop shared by both KV layouts, exposed
+    one chunk at a time::
+
+        core = engine.core(params, key, slots=8, max_seq_len=256)
+        core.add_request(Request(uid=0, tokens=prompt,
+                                 params=SamplingParams(temperature=0.7,
+                                                       top_p=0.9)))
+        while core.has_work():
+            for ev in core.step():          # one fused chunk of decode
+                consume(ev)                 # stream tokens / finishes
+
+    ``add_request`` queues a request (FIFO) and returns its uid;
+    ``step`` admits into free slots, runs one ``chunk``-step jitted
+    decode over the whole batch, and harvests the boundary into
+    :class:`StepEvent`\\ s; ``cancel`` marks a request so its slot and KV
+    blocks are reclaimed at the next chunk boundary.  Sampling
+    parameters are per-request and threaded through the decode graph as
+    tensors — admitting a greedy request next to a nucleus-sampled one
+    never retraces.
+    """
+
+    def __init__(self, engine: GenerationEngine, params, key, *,
+                 slots: int = 8, max_seq_len: int,
+                 num_blocks: Optional[int] = None,
+                 watermark: Optional[int] = None):
+        cfg = engine.cfg
+        if cfg.arch_type == "vlm" or not cfg.embed_inputs:
+            raise NotImplementedError(
+                "continuous batching supports token-input decoder LMs")
+        if engine.kv_layout != "paged" and (num_blocks is not None
+                                            or watermark is not None):
+            raise ValueError("num_blocks/watermark require kv_layout='paged'")
+        self.engine = engine
+        self.cfg = cfg
+        self.params = params
+        self.slots = int(slots)
+        S = int(max_seq_len)
+        if engine.kv_layout == "paged":
+            S = -(-S // engine.block_size) * engine.block_size
+        self.S = S
+
+        # device state (the donated decode carry lives here)
+        self.key = jnp.array(key, copy=True)   # chunk fns donate the key
+        self.logits = jnp.zeros((self.slots, cfg.vocab_size), jnp.float32)
+        self.pos = jnp.zeros((self.slots,), jnp.int32)
+        self.done = jnp.ones((self.slots,), bool)
+        self.limit = jnp.zeros((self.slots,), jnp.int32)
+        self.slot_keys = jnp.zeros((self.slots, 2), jnp.uint32)
+
+        # host truth for the per-slot sampling tensors (uploaded each
+        # dispatch; they only change at admission)
+        self._temp = np.full((self.slots,), 1.0, np.float32)
+        self._topk = np.zeros((self.slots,), np.int32)
+        self._topp = np.ones((self.slots,), np.float32)
+        self._own = np.zeros((self.slots,), bool)
+        self._eos = np.full((self.slots,), -1, np.int32)
+
+        self.queue: deque = deque()
+        self.active: List[Optional[_Active]] = [None] * self.slots
+        self.stamp = [0] * self.slots          # admission order, newest=max
+        self._tick = 0
+        self._live: Set[int] = set()           # uids queued or running
+        self._cancelled: Set[int] = set()
+
+        self.admitted = 0                      # includes re-admissions
+        self.chunks = 0
+        self.completed = 0
+        self.gen_tokens = 0
+        self.preemptions = 0
+
+        if engine.kv_layout == "paged":
+            self.backend = _PagedBackend(self, num_blocks, watermark)
+        else:
+            self.backend = _DenseBackend(self)
+
+    # ---------------------------------------------------------------- #
+    @property
+    def n_active(self) -> int:
+        return sum(a is not None for a in self.active)
+
+    def has_work(self) -> bool:
+        """Whether another :meth:`step` would make progress (requests
+        queued or in flight)."""
+        return bool(self.queue) or self.n_active > 0
+
+    def sampling_tensors(self):
+        """The per-slot sampling tensors, in chunk-argument order."""
+        return (jnp.asarray(self._temp), jnp.asarray(self._topk),
+                jnp.asarray(self._topp), jnp.asarray(self._own),
+                jnp.asarray(self._eos))
+
+    def add_request(self, r: Request) -> int:
+        """Queue a request (FIFO).  Validates that it can ever run under
+        this core's geometry; returns its uid (the cancel handle)."""
+        if r.uid in self._live:
+            raise ValueError(f"uid {r.uid} is already queued or running")
+        _, _, _, max_new, _, _ = self.engine.resolve(r)
+        if max_new > 0:
+            self.backend.check(r.uid, len(r.tokens), max_new)
+        self.queue.append(r)
+        self._live.add(r.uid)
+        return r.uid
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a queued or in-flight request.  Reclamation (slot,
+        blocks) happens at the next chunk boundary, where :meth:`step`
+        emits a ``finish_reason="cancelled"`` event.  Returns whether the
+        uid was live."""
+        if uid not in self._live:
+            return False
+        self._cancelled.add(uid)
+        return True
+
+    # ---------------------------------------------------------------- #
+    def release_slot(self, b: int, *, requeue: bool,
+                     events: Optional[List[StepEvent]] = None) -> None:
+        """Free slot ``b`` (blocks back to the pool under the paged
+        backend); optionally requeue its request at the queue front
+        (preemption).  The slot's device state keeps decoding garbage
+        (dense: into its own arena row; paged: into the trash block)
+        until the next admission resets it — nothing reads it."""
+        a = self.active[b]
+        self.backend.release(b)
+        if requeue and a is not None:
+            self.queue.appendleft(a.req)
+            self.preemptions += 1
+            if events is not None:
+                events.append(StepEvent(uid=a.req.uid, preempted=True))
+        self.active[b] = None
+
+    def _finish(self, b: int, new: np.ndarray, reason: str,
+                events: List[StepEvent]) -> None:
+        a = self.active[b]
+        self.gen_tokens += len(a.toks)
+        self.completed += 1
+        self._live.discard(a.req.uid)
+        events.append(StepEvent(uid=a.req.uid, new_tokens=new,
+                                finished=True, finish_reason=reason))
+        self.release_slot(b, requeue=False)
+
+    def _process_cancels(self, events: List[StepEvent]) -> None:
+        if not self._cancelled:
+            return
+        kept: deque = deque()
+        for r in self.queue:                   # cancelled before admission
+            if r.uid in self._cancelled:
+                self._cancelled.discard(r.uid)
+                self._live.discard(r.uid)
+                self.completed += 1
+                events.append(StepEvent(uid=r.uid, finished=True,
+                                        finish_reason="cancelled"))
+            else:
+                kept.append(r)
+        self.queue = kept
+        for b in range(self.slots):            # cancelled mid-flight
+            a = self.active[b]
+            if a is None or a.req.uid not in self._cancelled:
+                continue
+            self._cancelled.discard(a.req.uid)
+            # stop the lane from decoding garbage until the slot refills
+            self.done = self.done.at[b].set(True)
+            self._finish(b, _NO_TOKENS, "cancelled", events)
+
+    def _admit_phase(self, events: List[StepEvent]) -> None:
+        for b in range(self.slots):
+            if self.active[b] is not None:
+                continue
+            r = None
+            while self.queue:
+                cand = self.queue[0]
+                max_new = self.engine.resolve(cand)[3]
+                if max_new <= 0:               # zero budget: trivially done
+                    self.queue.popleft()
+                    self._live.discard(cand.uid)
+                    self.completed += 1
+                    events.append(StepEvent(uid=cand.uid, finished=True,
+                                            finish_reason="length"))
+                    continue
+                if not self.backend.can_admit(len(cand.tokens)):
+                    break                      # backpressure: head waits
+                r = self.queue.popleft()
+                break
+            if r is None:
+                if not self.queue:
+                    continue                   # drained; try other slots
+                break                          # FIFO: never admit past head
+            self._admit(b, r)
+
+    def _admit(self, b: int, r: Request) -> None:
+        e = self.engine
+        temp, top_k, top_p, max_new, eos, seed = e.resolve(r)
+        Lp = len(r.tokens)
+        Lb = Lp if e._exact_prefill else min(_next_bucket(Lp), self.S)
+        padded = np.zeros((1, Lb), np.int32)
+        padded[0, :Lp] = np.asarray(r.tokens, np.int32)
+        self.backend.admit(b, padded, Lp, max_new)
+        self._temp[b], self._topk[b], self._topp[b] = temp, top_k, top_p
+        self._eos[b] = -1 if eos is None else eos
+        self._own[b] = seed is not None
+        if seed is not None:
+            self.slot_keys = self.slot_keys.at[b].set(
+                jax.random.PRNGKey(seed))
+        self.active[b] = _Active(req=r, max_new=max_new, eos=eos)
+        self._tick += 1
+        self.stamp[b] = self._tick
+        self.admitted += 1
+
+    def step(self) -> List[StepEvent]:
+        """Advance the core by one chunk boundary: reclaim cancelled
+        requests, refill free slots from the queue, run one fused
+        ``chunk``-step decode over the slot batch, and harvest the
+        boundary into events.  Returns immediately (possibly with
+        queued-state events only) when nothing is decodable."""
+        events: List[StepEvent] = []
+        self._process_cancels(events)
+        self._admit_phase(events)
+        if self.n_active == 0:
+            return events
+        self.backend.prepare_chunk(events)     # paged top-up / preemption
+        if self.n_active == 0:                 # defensive; see prepare_chunk
+            return events
+        toks, was = self.backend.dispatch()
+        self.chunks += 1
+        toks_h, was_h = np.asarray(toks), np.asarray(was)
+        done_h = np.asarray(self.done)
+        for b in range(self.slots):
+            a = self.active[b]
+            if a is None:
+                continue
+            new = toks_h[~was_h[:, b], b]
+            a.toks.extend(new.tolist())
+            if done_h[b]:
+                gen = np.asarray(a.toks, np.int32)
+                by_eos = (a.eos is not None and gen.size > 0
+                          and int(gen[-1]) == a.eos
+                          and gen.size < a.max_new)
+                self._finish(b, new, "eos" if by_eos else "length", events)
+            elif new.size:
+                events.append(StepEvent(uid=a.req.uid, new_tokens=new))
+        return events
+
+    def stats(self) -> dict:
+        """Scheduler counters in the historical ``last_stats`` shape."""
+        e = self.engine
+        d = {
+            "requests": self.completed,
+            "admitted": self.admitted,
+            "decode_steps": self.chunks * e.chunk,
+            "scheduled_tokens": self.chunks * e.chunk * self.slots,
+            "generated_tokens": self.gen_tokens,
+        }
+        d.update(self.backend.stats())
+        return d

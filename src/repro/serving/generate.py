@@ -61,7 +61,7 @@ def decode_step(cfg: ModelConfig, params, token, cache, position, *,
 
 
 def decode_scan_step(cfg: ModelConfig, params, *, temperature: float,
-                     top_k: int, eos_id: Optional[int],
+                     top_k: int, eos_id: Optional[int], top_p: float = 1.0,
                      encoder_embeds=None):
     """Build the ``lax.scan`` body shared by :func:`generate` and the
     chunked engine decode.
@@ -75,7 +75,8 @@ def decode_scan_step(cfg: ModelConfig, params, *, temperature: float,
     def step(carry, _):
         logits, cache, key, pos, done = carry
         key, sub = jax.random.split(key)
-        tok = sample(logits, sub, temperature=temperature, top_k=top_k)
+        tok = sample(logits, sub, temperature=temperature, top_k=top_k,
+                     top_p=top_p)
         if eos_id is not None:
             tok = jnp.where(done, eos_id, tok)
         logits, cache = decode_step(cfg, params, tok, cache, pos,
@@ -86,7 +87,7 @@ def decode_scan_step(cfg: ModelConfig, params, *, temperature: float,
 
 
 def generate(cfg: ModelConfig, params, tokens, key, *, max_new_tokens: int,
-             temperature: float = 1.0, top_k: int = 0,
+             temperature: float = 1.0, top_k: int = 0, top_p: float = 1.0,
              eos_id: Optional[int] = None, encoder_embeds=None):
     """tokens: (B, Lp) fixed-length prompts.
 
@@ -112,7 +113,7 @@ def generate(cfg: ModelConfig, params, tokens, key, *, max_new_tokens: int,
                             encoder_embeds=encoder_embeds)
 
     step = decode_scan_step(cfg, params, temperature=temperature,
-                            top_k=top_k, eos_id=eos_id,
+                            top_k=top_k, top_p=top_p, eos_id=eos_id,
                             encoder_embeds=encoder_embeds)
     pos0 = jnp.full((B,), Lp, jnp.int32)
     done0 = jnp.zeros((B,), bool)

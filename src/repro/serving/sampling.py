@@ -1,4 +1,26 @@
-"""Token sampling: temperature / top-k / greedy, jit-friendly."""
+"""Token sampling: temperature / top-k / top-p (nucleus) / greedy.
+
+Two entry points, both jit-friendly:
+
+- :func:`sample` — scalar (static) parameters; the whole batch shares one
+  temperature/top_k/top_p.  Python-level branches mean disabled filters
+  cost nothing and the compiled graph for the historical
+  ``temperature+top_k`` configuration is unchanged.
+- :func:`sample_rows` — *per-row* parameter vectors over the batch dim,
+  used by the serving engine so one jitted decode graph serves
+  heterogeneously-sampled requests (each KV slot carries its own
+  temperature/top_k/top_p) with zero retracing.  Rows with
+  ``top_p == 1.0`` / ``top_k == 0`` / shared key reduce **bitwise** to
+  the scalar path: the temperature divide broadcasts the same value, the
+  k-th-largest threshold is the same array element ``lax.top_k`` would
+  return, and disabled filters are ``where``-gated back to the untouched
+  logits before the identical ``categorical`` call.
+
+``key`` for :func:`sample_rows` is either one PRNG key — every row draws
+from the batch's shared noise tensor, exactly like :func:`sample` — or a
+``(B, 2)`` stack of per-row keys, giving each row its own stream (the
+engine's per-request ``seed`` support).
+"""
 from __future__ import annotations
 
 import jax
@@ -7,12 +29,65 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def sample(logits, key, *, temperature: float = 1.0, top_k: int = 0):
-    """logits: (B, V) -> (B,) int32."""
+def _top_p_mask(logits, top_p):
+    """Nucleus filter: keep the smallest set of tokens whose cumulative
+    probability reaches ``top_p`` (the top-1 token is always kept; ties
+    with the threshold logit are kept, mirroring the top-k rule).
+    ``top_p`` is a scalar or a ``(B, 1)`` column; returns masked logits.
+    """
+    srt = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(srt, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < top_p               # exclusive cumsum below p
+    kp = jnp.maximum(keep.sum(axis=-1, keepdims=True) - 1, 0)
+    kth = jnp.take_along_axis(srt, kp, axis=-1)
+    return jnp.where(logits < kth, NEG_INF, logits)
+
+
+def sample(logits, key, *, temperature: float = 1.0, top_k: int = 0,
+           top_p: float = 1.0):
+    """logits: (B, V) -> (B,) int32.  Static (whole-batch) parameters;
+    ``temperature <= 0`` is greedy, ``top_k == 0`` / ``top_p == 1.0``
+    disable the respective filter."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
     if top_k:
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, NEG_INF, logits)
+    if top_p < 1.0:
+        logits = _top_p_mask(logits, top_p)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_rows(logits, key, *, temperature, top_k, top_p):
+    """Per-row-parameter sampling: logits (B, V) -> (B,) int32.
+
+    ``temperature`` (float), ``top_k`` (int) and ``top_p`` (float) are
+    ``(B,)`` vectors; row ``i`` is sampled with its own configuration
+    (``temperature[i] <= 0`` greedy, ``top_k[i] == 0`` / ``top_p[i] ==
+    1.0`` filter off).  ``key`` is one shared PRNG key or per-row keys
+    ``(B, 2)``.  With uniform vectors and a shared key the result is
+    bit-identical to :func:`sample`.
+    """
+    V = logits.shape[-1]
+    t = jnp.asarray(temperature, jnp.float32)
+    scaled = logits / jnp.where(t > 0, t, 1.0)[:, None]
+    # top-k: threshold at the k-th largest scaled logit where k is set
+    k = jnp.clip(jnp.asarray(top_k, jnp.int32), 0, V)
+    srt = jnp.sort(scaled, axis=-1)[..., ::-1]
+    kth = jnp.take_along_axis(srt, jnp.maximum(k - 1, 0)[:, None], axis=-1)
+    masked = jnp.where(scaled < kth, NEG_INF, scaled)
+    scaled = jnp.where((k > 0)[:, None], masked, scaled)
+    # top-p on the post-top-k distribution
+    p = jnp.asarray(top_p, jnp.float32)
+    scaled = jnp.where((p < 1.0)[:, None],
+                       _top_p_mask(scaled, p[:, None]), scaled)
+    key = jnp.asarray(key)
+    if key.ndim == 1:
+        sampled = jax.random.categorical(key, scaled, axis=-1)
+    else:
+        sampled = jax.vmap(
+            lambda kk, row: jax.random.categorical(kk, row))(key, scaled)
+    greedy = jnp.argmax(logits, axis=-1)
+    return jnp.where(t > 0, sampled, greedy).astype(jnp.int32)

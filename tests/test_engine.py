@@ -150,7 +150,10 @@ def test_continuous_eos_stops_per_slot():
             c.tokens,
             np.asarray(ref["sequences"][0, len(r.tokens):len(r.tokens) + n]))
     assert outs[0].finished_by_eos
+    assert outs[0].finish_reason == "eos"
     assert int(outs[0].tokens[-1]) == eos
+    assert all(outs[u].finish_reason == "length" for u in outs
+               if not outs[u].finished_by_eos)
 
 
 def test_slot_refill_bookkeeping():
@@ -193,6 +196,7 @@ def test_zero_budget_requests():
     outs = {c.uid: c for c in eng2.serve(PARAMS, reqs,
                                          jax.random.PRNGKey(3), slots=1)}
     assert outs[0].tokens.size == 0
+    assert outs[0].finish_reason == "length"
     assert outs[1].tokens.size == 3
 
 

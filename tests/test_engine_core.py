@@ -1,0 +1,326 @@
+"""Request-level serving core: heterogeneous per-request sampling
+identity (each seeded/greedy request's stream matches a solo run with
+the same params, regardless of batch composition), the one-compiled-
+graph retrace guard across mixed sampling configs, mid-flight
+cancellation (slot freed on dense, every block back to the pool on
+paged), streaming events, preemption events, per-request overrides
+(eos / budget), and the serve() wrapper's equivalence to a manual core
+drain."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ppo import PPOConfig, PPOTrainer
+from repro.models.config import ModelConfig
+from repro.models import reward as R
+from repro.models import transformer as T
+from repro.serving.engine import (GenerationEngine, Request, SamplingParams,
+                                  StepEvent)
+from repro.serving.generate import generate
+
+V = 64
+CFG = ModelConfig(name="core", arch_type="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=V,
+                  compute_dtype="float32", remat=False)
+KEY = jax.random.PRNGKey(0)
+PARAMS = T.init_params(CFG, KEY)
+
+MIXED = [
+    SamplingParams(temperature=0.0),                       # greedy
+    SamplingParams(temperature=0.7, top_p=0.9, seed=11),   # seeded nucleus
+    SamplingParams(top_k=40, seed=5),                      # seeded top-k
+    SamplingParams(temperature=1.0, top_p=0.8),            # shared-stream
+]
+
+
+def _reqs(lengths, budgets, params=None, seed=7):
+    rng = np.random.default_rng(seed)
+    params = params or [SamplingParams()] * len(lengths)
+    return [Request(uid=i,
+                    tokens=rng.integers(0, V, size=lp).astype(np.int32),
+                    max_new_tokens=mn, params=p)
+            for i, (lp, mn, p) in enumerate(zip(lengths, budgets, params))]
+
+
+def _engine(layout="dense", **kw):
+    kw.setdefault("max_new_tokens", 8)
+    kw.setdefault("chunk", 4)
+    kw.setdefault("block_size", 4)
+    return GenerationEngine(CFG, kv_layout=layout, **kw)
+
+
+def _drain(core):
+    events = []
+    while core.has_work():
+        events.extend(core.step())
+    return events
+
+
+# ------------------------------------------------------------------ #
+# heterogeneous sampling: one batch, per-request params
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_heterogeneous_identity_vs_solo(layout):
+    """Greedy and *seeded* requests in a mixed-params batch reproduce
+    their solo runs exactly: greedy is deterministic, and a seeded
+    request samples from its own PRNGKey(seed) chain, so neither can
+    depend on what else shares the batch."""
+    reqs = _reqs([4, 6, 3, 5], [8, 6, 7, 8], params=MIXED)
+    eng = _engine(layout, temperature=1.0, eos_id=V - 1)
+    outs = {c.uid: c for c in eng.serve(PARAMS, reqs, jax.random.PRNGKey(9),
+                                        slots=2, max_seq_len=16)}
+    assert sorted(outs) == [0, 1, 2, 3]
+    for uid in (0, 1, 2):                    # deterministic-stream requests
+        solo_eng = _engine(layout, temperature=1.0, eos_id=V - 1)
+        solo = solo_eng.serve(PARAMS, [reqs[uid]], jax.random.PRNGKey(123),
+                              slots=1, max_seq_len=16)
+        np.testing.assert_array_equal(outs[uid].tokens, solo[0].tokens)
+    # the greedy row also matches the fixed-scan reference
+    ref = generate(CFG, PARAMS, jnp.asarray(reqs[0].tokens)[None], KEY,
+                   max_new_tokens=8, temperature=0.0, eos_id=V - 1)
+    n = outs[0].tokens.size
+    np.testing.assert_array_equal(
+        outs[0].tokens, np.asarray(ref["sequences"][0, 4:4 + n]))
+
+
+def test_seeded_stream_independent_of_admission_order():
+    """A seeded request admitted late (behind a long queue) emits the
+    same tokens as when admitted first."""
+    target = Request(uid=100, tokens=np.arange(5, dtype=np.int32) + 1,
+                     max_new_tokens=6,
+                     params=SamplingParams(temperature=0.9, seed=42))
+    filler = _reqs([4, 6, 5], [8, 8, 8])
+    eng = _engine(temperature=1.0)
+    first = eng.serve(PARAMS, [target] + filler, jax.random.PRNGKey(1),
+                      slots=2, max_seq_len=16)
+    eng2 = _engine(temperature=1.0)
+    last = eng2.serve(PARAMS, filler + [target], jax.random.PRNGKey(2),
+                      slots=2, max_seq_len=16)
+    a = next(c for c in first if c.uid == 100)
+    b = next(c for c in last if c.uid == 100)
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_retrace_guard_one_chunk_graph(layout):
+    """Mixed sampling configs (greedy + t=0.7/top_p=0.9 + top_k=40 +
+    seeded) must run through a SINGLE compiled chunk graph — the
+    sampling parameters are tensors, never trace constants."""
+    reqs = _reqs([4, 6, 3, 5], [8, 6, 7, 8], params=MIXED)
+    eng = _engine(layout, temperature=1.0, eos_id=V - 1)
+    eng.serve(PARAMS, reqs, jax.random.PRNGKey(3), slots=2, max_seq_len=16)
+    fn = (eng._serve_chunk_fn if layout == "dense" else eng._paged_chunk_fn)
+    assert fn._cache_size() == 1
+    # a second queue with brand-new parameter values: still one graph
+    reqs2 = _reqs([5, 4], [8, 8], params=[
+        SamplingParams(temperature=1.7, top_k=3, top_p=0.5, seed=9),
+        SamplingParams(temperature=0.0)])
+    eng.serve(PARAMS, reqs2, jax.random.PRNGKey(4), slots=2, max_seq_len=16)
+    assert fn._cache_size() == 1
+
+
+# ------------------------------------------------------------------ #
+# per-request overrides
+# ------------------------------------------------------------------ #
+def test_per_request_eos_override():
+    """SamplingParams.eos_id overrides the engine stop token, and an
+    explicit None disables stopping even when the engine has an EOS."""
+    base = _reqs([4], [12])[0]
+    probe = generate(CFG, PARAMS, jnp.asarray(base.tokens)[None], KEY,
+                     max_new_tokens=12, temperature=0.0)
+    stream = np.asarray(probe["sequences"][0, 4:])
+    eos = int(stream[2])                          # greedy token at step 2
+    n_stop = int(np.argmax(stream == eos)) + 1    # first emission of it
+    eng = _engine(temperature=0.0, max_new_tokens=12, eos_id=eos)
+    stop, run_on = eng.serve(
+        PARAMS,
+        [Request(uid=0, tokens=base.tokens, max_new_tokens=12),
+         Request(uid=1, tokens=base.tokens.copy(), max_new_tokens=12,
+                 params=SamplingParams(eos_id=None))],
+        KEY, slots=2)
+    by = {c.uid: c for c in (stop, run_on)}
+    assert by[0].finish_reason == "eos" and by[0].tokens.size == n_stop
+    assert by[0].finished_by_eos                   # compat property
+    assert by[1].finish_reason == "length" and by[1].tokens.size == 12
+
+
+def test_sampling_params_budget_override():
+    eng = _engine(temperature=0.0, max_new_tokens=8)
+    outs = eng.serve(
+        PARAMS,
+        [Request(uid=0, tokens=np.arange(4, dtype=np.int32),
+                 params=SamplingParams(max_new_tokens=3)),
+         Request(uid=1, tokens=np.arange(4, dtype=np.int32) + 1)],
+        KEY, slots=2)
+    by = {c.uid: c for c in outs}
+    assert by[0].tokens.size == 3                  # params override
+    assert by[1].tokens.size == 8                  # engine default
+
+
+# ------------------------------------------------------------------ #
+# stepwise API: streaming, cancellation, preemption
+# ------------------------------------------------------------------ #
+def test_stream_events_concatenate_to_completion():
+    """Per-chunk StepEvents concatenate to exactly the serve() stream,
+    and every event carries at most ``chunk`` tokens."""
+    reqs = _reqs([3, 7, 5, 4], [8, 6, 8, 7])
+    eng = _engine(temperature=0.0)
+    ref = {c.uid: c for c in _engine(temperature=0.0).serve(
+        PARAMS, reqs, jax.random.PRNGKey(5), slots=2, max_seq_len=16)}
+    core = eng.core(PARAMS, jax.random.PRNGKey(5), slots=2, max_seq_len=16)
+    for r in reqs:
+        core.add_request(r)
+    streams = {r.uid: [] for r in reqs}
+    finished = {}
+    for ev in _drain(core):
+        assert ev.new_tokens.size <= eng.chunk
+        streams[ev.uid].extend(ev.new_tokens.tolist())
+        if ev.finished:
+            finished[ev.uid] = ev.finish_reason
+    assert sorted(finished) == [0, 1, 2, 3]
+    for uid, c in ref.items():
+        np.testing.assert_array_equal(
+            np.asarray(streams[uid], np.int32), c.tokens)
+        assert finished[uid] == c.finish_reason
+
+
+def test_cancel_mid_flight_dense_frees_slot():
+    """Cancelling an in-flight request reclaims its slot at the next
+    chunk boundary: a queued request then runs in it, and the cancelled
+    stream is a prefix of the solo run."""
+    reqs = _reqs([4, 5, 6], [12, 12, 12])
+    eng = _engine(temperature=0.0, max_new_tokens=12)
+    core = eng.core(PARAMS, KEY, slots=1, max_seq_len=20)
+    for r in reqs:
+        core.add_request(r)
+    got = core.step()                       # uid 0 admitted + 1 chunk
+    assert [ev.uid for ev in got] == [0] and not got[0].finished
+    partial = got[0].new_tokens.copy()
+    assert core.cancel(0)
+    events = _drain(core)
+    cancelled = [ev for ev in events if ev.finish_reason == "cancelled"]
+    assert [ev.uid for ev in cancelled] == [0]
+    done = {ev.uid: ev for ev in events if ev.finished}
+    assert sorted(done) == [0, 1, 2]        # slot was reused for 1 and 2
+    solo = generate(CFG, PARAMS, jnp.asarray(reqs[0].tokens)[None], KEY,
+                    max_new_tokens=12, temperature=0.0)
+    np.testing.assert_array_equal(
+        partial, np.asarray(solo["sequences"][0, 4:4 + partial.size]))
+    # cancel of an unknown / finished uid is a no-op
+    assert not core.cancel(0) and not core.cancel(999)
+
+
+def test_cancel_mid_flight_paged_returns_all_blocks():
+    """On the paged backend a cancel returns every block the slot owned
+    to the pool (no leak), and the remaining queue still completes."""
+    reqs = _reqs([6, 8, 5], [10, 10, 10])
+    eng = _engine("paged", temperature=0.0, max_new_tokens=10)
+    core = eng.core(PARAMS, KEY, slots=2, max_seq_len=20, num_blocks=11)
+    alloc = core.backend.alloc
+    for r in reqs:
+        core.add_request(r)
+    core.step()
+    assert alloc.num_used > 0
+    assert core.cancel(0) and core.cancel(1)
+    events = _drain(core)
+    assert sorted(ev.uid for ev in events
+                  if ev.finish_reason == "cancelled") == [0, 1]
+    assert next(ev for ev in events
+                if ev.uid == 2 and ev.finished).finish_reason == "length"
+    assert alloc.num_free == alloc.capacity          # every block returned
+
+
+def test_cancel_queued_request_never_runs():
+    reqs = _reqs([4, 5], [8, 8])
+    eng = _engine(temperature=0.0)
+    core = eng.core(PARAMS, KEY, slots=1, max_seq_len=16)
+    for r in reqs:
+        core.add_request(r)
+    assert core.cancel(1)                   # still queued behind uid 0
+    events = _drain(core)
+    ev1 = [ev for ev in events if ev.uid == 1]
+    assert len(ev1) == 1 and ev1[0].finish_reason == "cancelled"
+    assert ev1[0].new_tokens.size == 0
+    assert core.stats()["admitted"] == 1    # uid 1 never took a slot
+
+
+def test_preemption_emits_events_and_recovers():
+    """A pool sized for ~1 request forces preemptions; the events
+    surface them (streamed tokens invalidated) and every request still
+    finishes with correct greedy tokens."""
+    reqs = _reqs([3, 9, 4, 7], [5, 6, 7, 3])
+    eng = _engine("paged", temperature=0.0, chunk=2)
+    core = eng.core(PARAMS, jax.random.PRNGKey(5), slots=3, max_seq_len=20,
+                    num_blocks=6, watermark=0)
+    for r in reqs:
+        core.add_request(r)
+    streams = {r.uid: [] for r in reqs}
+    preempted = []
+    for ev in _drain(core):
+        if ev.preempted:
+            preempted.append(ev.uid)
+            streams[ev.uid] = []
+            continue
+        streams[ev.uid].extend(ev.new_tokens.tolist())
+    assert core.stats()["preemptions"] == len(preempted) > 0
+    for r in reqs:
+        ref = generate(CFG, PARAMS, jnp.asarray(r.tokens)[None], KEY,
+                       max_new_tokens=r.max_new_tokens, temperature=0.0)
+        np.testing.assert_array_equal(
+            np.asarray(streams[r.uid], np.int32),
+            np.asarray(ref["sequences"][0, len(r.tokens):]))
+
+
+def test_add_request_rejects_duplicate_and_oversized():
+    eng = _engine(max_new_tokens=8)
+    core = eng.core(PARAMS, KEY, slots=1, max_seq_len=10)
+    core.add_request(_reqs([4], [4])[0])
+    with pytest.raises(ValueError):
+        core.add_request(_reqs([4], [4])[0])         # duplicate live uid
+    with pytest.raises(ValueError):
+        core.add_request(Request(uid=9, tokens=np.zeros(6, np.int32),
+                                 max_new_tokens=8))  # 14 rows > 10
+    _drain(core)
+
+
+def test_zero_budget_event_and_stats():
+    eng = _engine(temperature=0.0)
+    core = eng.core(PARAMS, KEY, slots=1, max_seq_len=16)
+    core.add_request(Request(uid=0, tokens=np.arange(4, dtype=np.int32),
+                             max_new_tokens=0))
+    events = _drain(core)
+    assert len(events) == 1 and events[0].finished
+    assert events[0].finish_reason == "length"
+    st = core.stats()
+    assert st["requests"] == 1 and st["admitted"] == 0
+    assert st["decode_steps"] == 0
+
+
+# ------------------------------------------------------------------ #
+# PPO onto the core: ragged Request experience generation
+# ------------------------------------------------------------------ #
+def test_ppo_experience_from_ragged_requests():
+    trainer = PPOTrainer(
+        actor_cfg=CFG, critic_cfg=CFG, actor_params=PARAMS,
+        critic_params=R.init_params(CFG, KEY), ref_params=PARAMS,
+        reward_params=R.init_params(CFG, KEY),
+        ppo=PPOConfig(max_new_tokens=5, eos_id=3, use_ema=False,
+                      decode_chunk=4))
+    reqs = _reqs([4, 7, 5], [5, 5, 5],
+                 params=[SamplingParams(temperature=0.0),
+                         SamplingParams(seed=2),
+                         SamplingParams()])
+    exp, gm = trainer.generate_experience(reqs, jax.random.PRNGKey(8))
+    W = 7 + 5                               # longest prompt + budget
+    assert exp.sequences.shape == (3, W)
+    mask = np.asarray(exp.mask)
+    # response mask covers only each row's generated region
+    for i, r in enumerate(reqs):
+        lo = len(r.tokens) - 1              # mask is shifted by one
+        assert mask[i, :lo].sum() == 0
+        assert 0 < mask[i].sum() <= 5
+    for k in ("gen_tok_s", "decode_steps", "gen_len", "reward_score"):
+        assert np.isfinite(gm[k])
+    m = trainer.train_rlhf(exp)
+    assert all(np.isfinite(v) for v in m.values())

@@ -147,6 +147,7 @@ def test_paged_matches_dense_seeded_sampling():
     for uid in d:
         np.testing.assert_array_equal(d[uid].tokens, p[uid].tokens)
         assert d[uid].finished_by_eos == p[uid].finished_by_eos
+        assert d[uid].finish_reason == p[uid].finish_reason
 
 
 def test_paged_block_reuse_after_harvest_keeps_streams_identical():

@@ -1,0 +1,115 @@
+"""Sampler unit tests: the scalar path's new top-p (nucleus) filter, and
+the per-row-parameter ``sample_rows`` variant — including the bitwise
+top_p=1.0 / top_k=0 / uniform-vector equivalence to the scalar path that
+the serving engine's homogeneous-stream identity rests on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.sampling import sample, sample_rows
+
+B, V = 6, 41
+KEY = jax.random.PRNGKey(0)
+LOGITS = jax.random.normal(jax.random.PRNGKey(1), (B, V)) * 3.0
+
+
+def _full(val, dtype=jnp.float32):
+    return jnp.full((B,), val, dtype)
+
+
+# ------------------------------------------------------------------ #
+# scalar top-p
+# ------------------------------------------------------------------ #
+def test_scalar_top_p_one_is_bitwise_noop():
+    """top_p=1.0 must not perturb the historical temperature+top_k graph
+    (python-level gate, not a masked no-op)."""
+    a = sample(LOGITS, KEY, temperature=0.8, top_k=5)
+    b = sample(LOGITS, KEY, temperature=0.8, top_k=5, top_p=1.0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scalar_top_p_restricts_to_nucleus():
+    """With top_p small, only tokens inside the smallest cumulative-p
+    nucleus are ever sampled (top-1 always kept)."""
+    top_p = 0.3
+    probs = np.asarray(jax.nn.softmax(LOGITS, axis=-1))
+    draws = np.stack([
+        np.asarray(sample(LOGITS, k, temperature=1.0, top_p=top_p))
+        for k in jax.random.split(jax.random.PRNGKey(2), 100)])
+    for b in range(B):
+        order = np.argsort(probs[b])[::-1]
+        srt = probs[b][order]
+        n_keep = max(int(((np.cumsum(srt) - srt) < top_p).sum()), 1)
+        assert set(draws[:, b].tolist()) <= set(order[:n_keep].tolist())
+
+
+def test_scalar_top_p_greedy_limit():
+    """top_p below the max prob keeps only the argmax token."""
+    out = sample(LOGITS, KEY, temperature=1.0, top_p=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(jnp.argmax(LOGITS, axis=-1)))
+
+
+# ------------------------------------------------------------------ #
+# per-row variant: equivalence to the scalar path
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("t,k,p", [
+    (1.0, 0, 1.0),          # plain categorical
+    (0.7, 5, 1.0),          # temperature + top-k
+    (0.0, 0, 1.0),          # greedy
+    (1.3, 0, 0.6),          # temperature + nucleus
+    (0.9, 12, 0.8),         # all three filters
+])
+def test_rows_uniform_matches_scalar_bitwise(t, k, p):
+    """sample_rows with uniform parameter vectors and a shared key is
+    bit-identical to the scalar path — the property that keeps
+    homogeneous serve() streams unchanged by the vectorized sampler."""
+    a = sample(LOGITS, KEY, temperature=t, top_k=k, top_p=p)
+    b = sample_rows(LOGITS, KEY, temperature=_full(t),
+                    top_k=_full(k, jnp.int32), top_p=_full(p))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rows_mixed_params_per_row():
+    """Each row obeys its own configuration inside one call: a greedy
+    row returns the argmax, a disabled-filter row matches the scalar
+    no-filter draw, a tiny-top_p row collapses to its argmax."""
+    temp = jnp.array([1.0, 0.0, 1.0, 0.5, 1.0, 2.0])
+    top_k = jnp.array([0, 0, 1, 0, 4, 0], jnp.int32)
+    top_p = jnp.array([1.0, 1.0, 1.0, 1.0, 1.0, 1e-6])
+    out = np.asarray(sample_rows(LOGITS, KEY, temperature=temp,
+                                 top_k=top_k, top_p=top_p))
+    ref = np.asarray(sample(LOGITS, KEY, temperature=1.0))
+    amax = np.asarray(jnp.argmax(LOGITS, axis=-1))
+    assert out[0] == ref[0]                 # row 0: same as scalar t=1
+    assert out[1] == amax[1]                # greedy row
+    assert out[2] == amax[2]                # top_k=1 forces argmax
+    assert out[5] == amax[5]                # top_p→0 forces argmax
+
+
+def test_rows_per_row_keys_are_independent_streams():
+    """With per-row keys, a row's draw depends only on its own key and
+    logits — the engine's per-request ``seed`` reproducibility."""
+    keys = jnp.stack([jax.random.PRNGKey(10 + i) for i in range(B)])
+    full = sample_rows(LOGITS, keys, temperature=_full(1.0),
+                       top_k=_full(0, jnp.int32), top_p=_full(1.0))
+    for i in (0, 3, B - 1):
+        solo = sample_rows(LOGITS[i:i + 1], keys[i:i + 1],
+                           temperature=_full(1.0)[:1],
+                           top_k=_full(0, jnp.int32)[:1],
+                           top_p=_full(1.0)[:1])
+        assert int(full[i]) == int(solo[0])
+
+
+def test_rows_one_jitted_graph_across_param_values():
+    """The parameters are runtime tensors: jitting sample_rows and
+    calling it with different temperature/top_k/top_p values must not
+    retrace."""
+    fn = jax.jit(lambda l, k, t, tk, tp: sample_rows(
+        l, k, temperature=t, top_k=tk, top_p=tp))
+    fn(LOGITS, KEY, _full(1.0), _full(0, jnp.int32), _full(1.0))
+    fn(LOGITS, KEY, _full(0.0), _full(7, jnp.int32), _full(0.5))
+    fn(LOGITS, KEY, jnp.linspace(0.0, 2.0, B), _full(3, jnp.int32),
+       _full(0.9))
+    assert fn._cache_size() == 1

@@ -2,7 +2,9 @@
 acceptance bar for ``docs/serving.md``: no documented flag without a
 test or CI smoke run).  Runs ``main()`` with a patched argv on the
 reduced smollm config — small enough for CPU, real enough to cover the
-full launcher code path including checkpoint load and chat mode."""
+full launcher code path including checkpoint load, JSONL request files
+with per-request sampling fields, and the streaming chat mode."""
+import json
 import sys
 
 import jax
@@ -58,3 +60,33 @@ def test_chat_flag(monkeypatch, capsys):
     monkeypatch.setattr("builtins.input", lambda *_: next(lines))
     out = _run(monkeypatch, capsys, "--chat")
     assert "chat mode" in out and "Assistant:" in out
+
+
+def test_requests_jsonl_with_per_request_sampling(monkeypatch, capsys,
+                                                  tmp_path):
+    """--requests PATH: heterogeneous per-line sampling fields (greedy,
+    nucleus, seeded, top-k, eos override) drain through one core."""
+    path = tmp_path / "reqs.jsonl"
+    lines = [
+        {"prompt": "Hello there", "max_new_tokens": 6, "temperature": 0.0},
+        {"prompt": "Hi", "temperature": 0.7, "top_p": 0.9, "seed": 1},
+        {"tokens": [1, 2, 3, 4], "max_new_tokens": 5, "top_k": 4},
+        {"prompt": "Yo", "max_new_tokens": 4, "eos_id": 2},
+    ]
+    path.write_text("\n".join(json.dumps(d) for d in lines) + "\n")
+    out = _run(monkeypatch, capsys, "--scheduler", "continuous",
+               "--requests", str(path), "--top-p", "0.95")
+    assert "requests=4" in out and "tok/s" in out
+
+
+def test_requests_jsonl_paged_fixed_wave(monkeypatch, capsys, tmp_path):
+    """The collapsed drain loop serves every scheduler x layout combo —
+    including fixed waves over the paged backend, which the pre-core
+    launcher rejected."""
+    path = tmp_path / "reqs.jsonl"
+    path.write_text("\n".join(json.dumps(
+        {"prompt": f"q{i}", "max_new_tokens": 4 + i}) for i in range(5)))
+    out = _run(monkeypatch, capsys, "--scheduler", "fixed",
+               "--requests", str(path), "--kv-layout", "paged",
+               "--block-size", "4")
+    assert "scheduler=fixed" in out and "kv=paged" in out
