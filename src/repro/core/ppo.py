@@ -40,6 +40,15 @@ class PPOConfig:
     top_p: float = 1.0
     eos_id: Optional[int] = None   # enables early-exit decode when set
     decode_chunk: int = 32         # decode dispatch granularity (engine)
+    # best-of-n experience generation: each prompt is sampled n times
+    # (fixed-shape prompt batches are row-tiled; request lists are
+    # expanded with per-copy seeds); with the paged engine's prefix
+    # cache on, the request path reuses each prompt's prefilled KV
+    # blocks, so the prompt prefill cost is paid once, not n times
+    n_samples_per_prompt: int = 1
+    kv_layout: str = "dense"       # generation engine KV layout
+    kv_block_size: int = 16        # paged: tokens per KV block
+    prefix_cache: bool = False     # paged: prefix-aware block reuse
     kl_coef: float = 0.1
     clip_eps: float = 0.2
     value_clip: float = 0.2
@@ -157,7 +166,9 @@ class PPOTrainer:
         gen_opts = dict(max_new_tokens=ppo.max_new_tokens,
                         temperature=ppo.temperature, top_k=ppo.top_k,
                         top_p=ppo.top_p, eos_id=ppo.eos_id,
-                        chunk=ppo.decode_chunk)
+                        chunk=ppo.decode_chunk, kv_layout=ppo.kv_layout,
+                        block_size=ppo.kv_block_size,
+                        prefix_cache=ppo.prefix_cache)
         self.gen_engine = (engine.generation_engine(**gen_opts)
                            if engine is not None
                            else GenerationEngine(actor_cfg, **gen_opts))
@@ -182,6 +193,13 @@ class PPOTrainer:
         if isinstance(prompts, (list, tuple)):
             return self._experience_from_requests(list(prompts), key)
         t0 = time.perf_counter()
+        if self.ppo.n_samples_per_prompt > 1:
+            # best-of-n on the fixed-shape path: tile each prompt row n
+            # times (rows sample independently from the shared key, so
+            # stochastic copies diverge; the request path additionally
+            # reuses each prompt's prefill via the prefix cache)
+            prompts = jnp.repeat(jnp.asarray(prompts),
+                                 self.ppo.n_samples_per_prompt, axis=0)
         params = self.actor.params
         if self.engine is not None:
             params = self.engine.to_inference(params)
@@ -198,18 +216,40 @@ class PPOTrainer:
                      "decode_steps": float(
                          self.gen_engine.last_stats["decode_steps"])}
 
+    def _expand_samples(self, requests):
+        """Best-of-n expansion: replicate each request
+        ``n_samples_per_prompt`` times under fresh internal uids, copies
+        of one prompt adjacent in the queue (the first copy's admission
+        indexes the prompt's KV blocks, so with the paged engine's
+        prefix cache every later copy prefills only the final token
+        chunk).  Seeded requests get per-copy seeds — identical samples
+        per prompt would make best-of-n pointless."""
+        n = self.ppo.n_samples_per_prompt
+        if n <= 1:
+            return list(requests)
+        out = []
+        for i, r in enumerate(requests):
+            for j in range(n):
+                p = r.params
+                if p is not None and p.seed is not None and j > 0:
+                    p = dataclasses.replace(p, seed=p.seed + j)
+                out.append(dataclasses.replace(r, uid=i * n + j, params=p))
+        return out
+
     def _experience_from_requests(self, requests, key, *, slots: int = 8):
         """Ragged experience generation through the stepwise engine core:
         serve the request queue (continuous batching over ragged
-        prompts/budgets), then right-pad ``prompt | generated | pad``
-        rows to one stable width for the jitted scorer.  Padding is
-        excluded from the response mask and from the reward model's
-        end-score position via the attention mask."""
+        prompts/budgets; each prompt sampled ``n_samples_per_prompt``
+        times), then right-pad ``prompt | generated | pad`` rows to one
+        stable width for the jitted scorer.  Padding is excluded from
+        the response mask and from the reward model's end-score position
+        via the attention mask."""
         t0 = time.perf_counter()
         params = self.actor.params
         if self.engine is not None:
             params = self.engine.to_inference(params)
         eng = self.gen_engine
+        requests = self._expand_samples(requests)
         outs = {c.uid: c for c in eng.serve(
             params, requests, key, slots=min(slots, len(requests)))}
         gen_s = time.perf_counter() - t0
@@ -234,11 +274,14 @@ class PPOTrainer:
                                   self.critic.params, self.reward_params,
                                   sequences, response_mask,
                                   jnp.asarray(attn))
-        return exp, {"reward_score": float(score.mean()),
-                     "gen_len": float(response_mask.sum(1).mean()),
-                     "gen_tok_s": n_gen / max(gen_s, 1e-9),
-                     "decode_steps": float(
-                         eng.last_stats["decode_steps"])}
+        gm = {"reward_score": float(score.mean()),
+              "gen_len": float(response_mask.sum(1).mean()),
+              "gen_tok_s": n_gen / max(gen_s, 1e-9),
+              "decode_steps": float(eng.last_stats["decode_steps"])}
+        if "prefill_hit_rate" in eng.last_stats:     # paged engine
+            gm["prefill_hit_rate"] = float(
+                eng.last_stats["prefill_hit_rate"])
+        return exp, gm
 
     def train_rlhf(self, exp: X.Experience, ptx_batch=None):
         """Training phase (ZeRO layout)."""

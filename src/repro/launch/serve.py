@@ -23,6 +23,11 @@ SAME drain loop — they differ only in when requests are fed to the core:
                              ``--num-blocks`` caps the pool (default:
                              dense-arena parity) and ``--watermark``
                              sets the free-block admission reserve
+- ``--prefix-cache on``      paged only: radix prefix cache — shared
+                             prompt prefixes are admitted as shared
+                             read-only blocks and only the uncached
+                             suffix prefills; the drain summary prints
+                             the hit rate and eviction count
 
 ``--requests`` is either a COUNT (synthetic workload; ``--ragged`` draws
 variable prompt/response lengths) or a PATH to a JSONL file with one
@@ -35,8 +40,11 @@ request per line and per-request sampling fields::
 (every sampling field optional — omitted fields fall back to the engine
 defaults from ``--temperature`` / ``--top-k`` / ``--top-p`` /
 ``--eos-id``; heterogeneous lines share ONE compiled decode graph).
-``--chat`` drops into a toy conversation loop that streams tokens from
-the core as they decode.  See ``docs/serving.md`` for the tuning guide.
+``--chat`` drops into a toy conversation loop on ONE persistent core:
+each turn's prompt is the accumulated conversation, so with
+``--prefix-cache on`` only the new line re-prefills (the harvested
+history blocks match out of the radix cache).  See ``docs/serving.md``
+for the tuning guide.
 """
 from __future__ import annotations
 
@@ -134,13 +142,21 @@ def run_schedule(engine, params, reqs, key, *, mode: str, slots: int,
 
 
 def chat_loop(engine, params, tok: ByteTokenizer, args) -> None:
-    """Toy conversation loop streaming tokens from the core as they
-    decode (one slot, one request per turn).  Replies stop at the byte
-    tokenizer's EOS unless ``--eos-id`` overrides it."""
+    """Toy conversation loop streaming tokens from ONE persistent core:
+    each turn's prompt is the whole conversation so far plus the new
+    line, so with ``--prefix-cache on`` a turn re-prefills only its new
+    line — the harvested history blocks are matched straight out of the
+    radix cache (per-turn hit stats are printed).  When the
+    conversation outgrows the KV geometry the context is cleared.
+    Replies stop at the byte tokenizer's EOS unless ``--eos-id``
+    overrides it."""
     print("chat mode — empty line to exit")
-    S = args.prompt_len + args.max_new
+    S = 4 * (args.prompt_len + args.max_new)
     eos = (args.eos_id if args.eos_id is not None
            else min(tok.eos_id, engine.cfg.vocab_size - 1))
+    core = engine.core(params, jax.random.PRNGKey(args.seed),
+                       slots=1, max_seq_len=S)
+    history = np.zeros((0,), np.int32)
     turn = 0
     while True:
         try:
@@ -151,18 +167,30 @@ def chat_loop(engine, params, tok: ByteTokenizer, args) -> None:
             break
         ids = np.minimum(tok.encode(text, max_len=args.prompt_len),
                          engine.cfg.vocab_size - 1).astype(np.int32)
-        core = engine.core(params, jax.random.PRNGKey(args.seed + turn),
-                           slots=1, max_seq_len=S)
-        core.add_request(Request(uid=turn, tokens=ids,
+        prompt = np.concatenate([history, ids])
+        if len(prompt) + args.max_new > core.S:  # context full: reset
+            print("[context full — clearing conversation]")
+            history = np.zeros((0,), np.int32)
+            prompt = ids
+        hits0 = (core.backend.cached_prefill_tokens
+                 if engine.kv_layout == "paged" else 0)
+        core.add_request(Request(uid=turn, tokens=prompt,
                                  max_new_tokens=args.max_new,
                                  params=SamplingParams(eos_id=eos)))
         print("Assistant: ", end="", flush=True)
+        reply: list = []
         while core.has_work():
             for ev in core.step():
                 if ev.new_tokens.size:
+                    reply.extend(ev.new_tokens.tolist())
                     sys.stdout.write(tok.decode(ev.new_tokens))
                     sys.stdout.flush()
         print()
+        if engine.prefix_cache:
+            hit = core.backend.cached_prefill_tokens - hits0
+            print(f"  [prefix-cache: {hit}/{len(prompt)} prompt tokens "
+                  f"served from cache]")
+        history = np.concatenate([prompt, np.asarray(reply, np.int32)])
         turn += 1
 
 
@@ -194,6 +222,12 @@ def main():
                     help="paged: free blocks reserved at admission "
                          "(default: dynamic, one chunk of appends per "
                          "running slot)")
+    ap.add_argument("--prefix-cache", choices=["on", "off"], default="off",
+                    help="paged: prefix-aware block reuse — admission "
+                         "maps the longest cached prompt prefix into "
+                         "the slot's table and prefills only the "
+                         "uncached suffix; harvested blocks park in an "
+                         "LRU and are evicted before any preemption")
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-k", type=int, default=40)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -205,6 +239,8 @@ def main():
     if args.kv_layout == "dense" and (args.num_blocks is not None
                                       or args.watermark is not None):
         ap.error("--num-blocks/--watermark require --kv-layout paged")
+    if args.prefix_cache == "on" and args.kv_layout != "paged":
+        ap.error("--prefix-cache on requires --kv-layout paged")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -221,7 +257,8 @@ def main():
                               top_k=args.top_k, top_p=args.top_p,
                               eos_id=args.eos_id, chunk=args.chunk,
                               kv_layout=args.kv_layout,
-                              block_size=args.block_size)
+                              block_size=args.block_size,
+                              prefix_cache=args.prefix_cache == "on")
     if args.chat:
         chat_loop(engine, params, tok, args)
         return
@@ -246,6 +283,13 @@ def main():
                  f"hwm={stats['block_high_water']} "
                  f"preempt={stats['preemptions']} "
                  f"mean_conc={stats['mean_concurrency']:.1f}]")
+        if args.prefix_cache == "on":
+            extra += (
+                f"  [prefix-cache: hit_rate={stats['prefill_hit_rate']:.1%}"
+                f" cached_tokens={stats['cached_prefill_tokens']}"
+                f" computed_tokens={stats['computed_prefill_tokens']}"
+                f" evictions={stats['cache_evictions']}"
+                f" cached_blocks={stats['cached_blocks']}]")
     print(f"scheduler={args.scheduler}  kv={args.kv_layout}  "
           f"requests={len(reqs)}  "
           f"generated {n_tok} tokens in {dt:.3f}s  ({n_tok / dt:.1f} tok/s, "

@@ -523,10 +523,10 @@ def attn_apply(cfg: ModelConfig, p, x, *, positions, mode, cache=None,
         # attend through the block table.  Rows past a slot's allocated
         # prefix resolve to the trash block (table padding = 0); with a
         # FULLY allocated table the clamped index instead wraps post-EOS
-        # writes into the slot's own last block — also dead, because a
-        # finished slot's output is masked until harvest and its blocks
-        # are re-scattered before reuse (no prefix reuse of harvested
-        # blocks).
+        # writes into the slot's own last block — dead for decode (a
+        # finished slot's output is masked until harvest), and the
+        # prefix cache never indexes that last block, so its possibly
+        # stale rows are never reused as a cached prefix.
         assert cache is not None
         assert not cfg.kv_quant and window is None, \
             "paged KV supports plain full-context GQA only"
@@ -577,11 +577,25 @@ def attn_apply(cfg: ModelConfig, p, x, *, positions, mode, cache=None,
             new_cache = dict(k=k_cache, v=v_cache)
         o = o[:, None]                              # (B,1,H,hd)
     else:
+        # prefix-cache suffix prefill: the cache dict may carry a
+        # read-only KV history ("hk"/"hv", gathered from shared pool
+        # blocks) that the current tokens attend to but never rewrite.
+        # Keys are [history; current] and queries are the LAST Lq of the
+        # Lk positions, which is exactly the kernels' rectangular-causal
+        # convention (q_offset = Lk - Lq); RoPE is position-correct on
+        # both sides (history keys were rotated at their absolute
+        # positions when first written, current q/k via ``positions``).
+        k_att, v_att = k, v
+        if cache is not None and "hk" in cache:
+            k_att = jnp.concatenate([cache["hk"], k], axis=1)
+            v_att = jnp.concatenate([cache["hv"], v], axis=1)
         if cfg.use_pallas:
             from repro.kernels import ops as kops
-            o = kops.flash_attention(q, k, v, causal=True, window=window)
+            o = kops.flash_attention(q, k_att, v_att, causal=True,
+                                     window=window)
         else:
-            o = flash_attention(q, k, v, causal=True, window=window)
+            o = flash_attention(q, k_att, v_att, causal=True, window=window,
+                                qpos0=k_att.shape[1] - q.shape[1])
         if mode == "prefill":
             assert cache is not None
             S = cache["k"].shape[1]

@@ -64,6 +64,26 @@ are *cache backends* behind the same scheduling loop:
   reference under ``jnp``.  Given the same admission order and no
   preemptions, token streams are identical to the dense layout.
 
+  With ``prefix_cache=True`` the pool is additionally *prefix-aware*
+  (the SGLang RadixAttention / vLLM automatic-prefix-caching idea):
+  blocks are ref-counted and indexed by a content hash chained over
+  their token prefix, admission maps the longest cached prefix into the
+  slot's table as shared read-only blocks and prefills only the
+  uncached suffix (each layer gathers the prefix KV and the suffix
+  attends ``[prefix; suffix]`` rectangularly), and harvest parks a
+  finished sequence's full blocks in an LRU instead of freeing them.
+  Allocation evicts those cached blocks before the engine ever preempts
+  a running slot, so enabling the cache never reduces admission.  Tail
+  blocks are copied, never shared (copy-on-write): a sequence's decode
+  writes start at ``prompt_len``, strictly past its shared prefix, so
+  shared blocks are immutable — and the token streams are the same as
+  with the cache off, given the same admission order (the suffix
+  prefill recomputes exactly the logits the full prefill would have
+  produced).  See :mod:`repro.serving.block_pool` for the index design
+  and the one caveat (a fully allocated table's last block is never
+  indexed — a finished slot's clamped post-EOS writes may wrap into
+  it).
+
 Ragged prefill correctness: prompts are right-padded to a shape bucket and
 prefilled with causal attention, so real tokens never attend padding.  The
 padded KV rows beyond the true prompt length are garbage, but decode
@@ -74,8 +94,9 @@ the paged layout, where bucket-padding rows past the prompt's last
 allocated block (and post-EOS decode writes before harvest) additionally
 fall through the table's trash-block padding into block 0, which nothing
 reads (a finished slot with a fully allocated table wraps such writes
-into its own last block instead — equally dead, as its blocks are
-re-scattered before reuse).  Architectures with recurrent state (SSM /
+into its own last block instead — dead for decode, and excluded from
+prefix-cache indexing at harvest so stale rows are never reused).
+Architectures with recurrent state (SSM /
 hybrid) cannot skip pad
 tokens this way, so for them admission prefills at the exact prompt
 length (one compile per distinct length instead of per bucket); they are
@@ -155,11 +176,6 @@ class Completion:
     tokens: np.ndarray                 # generated tokens, EOS included
     finish_reason: str                 # "eos" | "length" | "cancelled"
 
-    @property
-    def finished_by_eos(self) -> bool:
-        """Compat shim for the pre-``finish_reason`` API (one release)."""
-        return self.finish_reason == "eos"
-
 
 _NO_TOKENS = np.zeros((0,), np.int32)
 
@@ -190,6 +206,32 @@ def _next_bucket(n: int, lo: int = 8) -> int:
     return b
 
 
+def _pad_bucket(tokens: np.ndarray, width: int) -> np.ndarray:
+    """Right-pad a 1-D token array to a (1, width) prefill batch."""
+    out = np.zeros((1, width), np.int32)
+    out[0, :len(tokens)] = np.asarray(tokens, np.int32)
+    return out
+
+
+def _scatter_row_blocks(pool, row, blk_ids, bs: int):
+    """Scatter a single-row prefill cache (leaves ``(n_units, 1, Lb,
+    ...)``) block-wise into the paged pool at ``blk_ids`` — the one
+    pool-write primitive shared by both paged admission paths.  Rows
+    past the last real block land in the trash entries ``blk_ids`` is
+    padded with."""
+    nbp = blk_ids.shape[0]
+
+    def scatter(pool_leaf, row_leaf):
+        r = row_leaf[:, 0]                    # (n_units, Lb, KV, hd)
+        pad = nbp * bs - r.shape[1]
+        if pad:
+            r = jnp.pad(r, ((0, 0), (0, pad)) + ((0, 0),) * (r.ndim - 2))
+        r = r.reshape((r.shape[0], nbp, bs) + r.shape[2:])
+        return pool_leaf.at[:, blk_ids].set(r)
+
+    return jax.tree_util.tree_map(scatter, pool, row)
+
+
 @dataclasses.dataclass
 class _Active:
     """Host-side state of one occupied slot."""
@@ -215,7 +257,7 @@ class GenerationEngine:
                  temperature: float = 1.0, top_k: int = 0,
                  top_p: float = 1.0, eos_id: Optional[int] = None,
                  chunk: int = 32, kv_layout: str = "dense",
-                 block_size: int = 16):
+                 block_size: int = 16, prefix_cache: bool = False):
         self.cfg = cfg
         self.max_new_tokens = int(max_new_tokens)
         self.temperature = float(temperature)
@@ -227,6 +269,9 @@ class GenerationEngine:
             raise ValueError(f"kv_layout={kv_layout!r}")
         self.kv_layout = kv_layout
         self.block_size = max(1, int(block_size))
+        if prefix_cache and kv_layout != "paged":
+            raise ValueError("prefix_cache requires kv_layout='paged'")
+        self.prefix_cache = bool(prefix_cache)
         # exact-length prefill for layers with recurrent state (see module
         # docstring); pure-attention stacks can use shape buckets
         self._exact_prefill = any(
@@ -261,6 +306,12 @@ class GenerationEngine:
         # host allocator's truth each dispatch)
         self._admit_paged_fn = jax.jit(self._admit_paged_impl,
                                        donate_argnums=(6, 7, 8, 9, 10))
+        # prefix-cache admission: retraces per (suffix bucket, prefix
+        # block count, suffix block count) shape; the gathered history
+        # rides in as block ids, the pool is donated like the plain path
+        self._admit_paged_prefix_fn = jax.jit(
+            self._admit_paged_prefix_impl,
+            donate_argnums=(8, 9, 10, 11, 12))
         self._paged_chunk_fn = jax.jit(self._paged_chunk_impl,
                                        donate_argnums=(1, 2, 3, 4, 5, 6))
 
@@ -389,22 +440,50 @@ class GenerationEngine:
         scatter it block-wise into the pool at ``blk_ids`` (trash-padded
         past the prompt's last allocated block), and reset the slot's
         decode state.  Retraces per (bucket length, block count) shape."""
-        bs = self.block_size
         Lb = tokens.shape[1]
         row, logit = self._prefill_row(params, tokens, length,
                                        T.init_cache(self.cfg, 1, Lb))
-        nbp = blk_ids.shape[0]
-        pad = nbp * bs - Lb
-
-        def scatter(pool_leaf, row_leaf):
-            r = row_leaf[:, 0]                    # (n_units, Lb, KV, hd)
-            if pad:
-                r = jnp.pad(r, ((0, 0), (0, pad)) + ((0, 0),) * (r.ndim - 2))
-            r = r.reshape((r.shape[0], nbp, bs) + r.shape[2:])
-            return pool_leaf.at[:, blk_ids].set(r)
-
-        pool = jax.tree_util.tree_map(scatter, pool, row)
+        pool = _scatter_row_blocks(pool, row, blk_ids, self.block_size)
         return (pool,) + self._slot_reset(slot, logit, length, max_new,
+                                          logits_buf, pos, done, limit)
+
+    def _admit_paged_prefix_impl(self, params, tokens, Ls, Lp, max_new,
+                                 slot, prefix_ids, blk_ids, pool,
+                                 logits_buf, pos, done, limit):
+        """Prefix-cache admission: ``tokens`` is the padded UNCACHED
+        suffix of the prompt (true length ``Ls``); the first
+        ``len(prefix_ids) * block_size`` prompt tokens already sit in
+        shared pool blocks.  The suffix prefills against that history —
+        each layer gathers the prefix KV from the pool and the suffix
+        attends ``[prefix; suffix]`` with rectangular causal masking —
+        and its fresh KV rows scatter into the private ``blk_ids``
+        blocks (trash-padded past the suffix's last allocated block).
+        Shared blocks are read, never written.  Retraces per (suffix
+        bucket, prefix block count, block count) shape."""
+        cfg, bs = self.cfg, self.block_size
+        Lb = tokens.shape[1]
+        n_pre = prefix_ids.shape[0]
+        P0 = n_pre * bs                       # static: cached prefix rows
+
+        def gather(pool_leaf):                # -> (n_units, 1, P0, KV, hd)
+            h = pool_leaf[:, prefix_ids]      # (n_units, n_pre, bs, KV, hd)
+            return h.reshape((h.shape[0], 1, P0) + h.shape[3:])
+
+        def merge(row_t, hist_t):
+            if isinstance(row_t, dict):
+                return {**row_t, "hk": hist_t["k"], "hv": hist_t["v"]}
+            return tuple(merge(r, h) for r, h in zip(row_t, hist_t))
+
+        hist = jax.tree_util.tree_map(gather, pool)
+        row = merge(T.init_cache(cfg, 1, Lb), hist)
+        positions = P0 + jnp.arange(Lb, dtype=jnp.int32)[None]
+        hidden, row, _ = T.forward(cfg, params, tokens=tokens,
+                                   mode="prefill", cache=row,
+                                   positions=positions)
+        h_last = hidden[0, Ls - 1]            # true last prompt token
+        logit = T.logits_fn(cfg, params, h_last[None, None])[0, 0]
+        pool = _scatter_row_blocks(pool, row, blk_ids, bs)
+        return (pool,) + self._slot_reset(slot, logit, Lp, max_new,
                                           logits_buf, pos, done, limit)
 
     # ================================================================ #
@@ -574,8 +653,11 @@ class _DenseBackend:
     def can_admit(self, n_prompt_tokens: int) -> bool:
         return True
 
-    def admit(self, slot: int, padded, Lp: int, max_new: int) -> None:
+    def admit(self, slot: int, tokens: np.ndarray, Lp: int,
+              max_new: int) -> None:
         c, e = self.core, self.core.engine
+        padded = _pad_bucket(tokens, Lp if e._exact_prefill
+                             else min(_next_bucket(Lp), c.S))
         self.cache, c.logits, c.pos, c.done, c.limit = e._admit_fn(
             c.params, jnp.asarray(padded), jnp.int32(Lp),
             jnp.int32(max_new), jnp.int32(slot), self.cache, c.logits,
@@ -592,7 +674,8 @@ class _DenseBackend:
                 c.done, c.limit, *c.sampling_tensors())
         return toks, was
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int,
+                seq_tokens: Optional[np.ndarray] = None) -> None:
         pass                                   # rows are reused in place
 
     def stats(self) -> dict:
@@ -603,7 +686,20 @@ class _PagedBackend:
     """Block-pooled KV cache: admission allocates prompt blocks under a
     watermark reserve, every chunk boundary tops tables up to cover the
     next chunk (preempting the newest slot if the pool runs dry), and
-    release returns a slot's blocks to the pool."""
+    release returns a slot's blocks to the pool.
+
+    With ``prefix_cache`` on, admission first matches the prompt against
+    the allocator's content-hash radix index and maps the longest cached
+    prefix (full blocks only) into the slot's table as shared read-only
+    blocks; only the uncached suffix is prefilled — against the gathered
+    prefix KV — into freshly allocated private blocks.  Tail blocks are
+    copied, not shared (copy-on-write): a block the sequence will write
+    into is never mapped shared, so decode appends (positions
+    ``>= prompt_len``) always land strictly past the shared prefix.
+    Harvest indexes a finished sequence's full blocks instead of freeing
+    them (they park in the allocator's LRU once unreferenced), and
+    allocation evicts those cached blocks before the engine ever
+    preempts a running slot."""
 
     def __init__(self, core: "EngineCore", num_blocks: Optional[int],
                  watermark: Optional[int]):
@@ -617,6 +713,7 @@ class _PagedBackend:
         self.alloc = BlockAllocator(num_blocks, bs)
         self.tables = BlockTables(self.alloc, core.slots, self.nbmax)
         self.watermark = watermark
+        self.prefix_cache = e.prefix_cache
         # admission reserve: ``watermark`` free blocks, or (default) one
         # chunk's worth of decode appends per *running* slot — a static
         # reserve sized by the slot cap would strangle small pools
@@ -629,6 +726,8 @@ class _PagedBackend:
         self.host_limit = [0] * core.slots
         self.conc: List[int] = []
         self.used_samples: List[int] = []
+        self.cached_prefill_tokens = 0         # prompt rows served by cache
+        self.computed_prefill_tokens = 0       # prompt rows prefilled
 
     def check(self, uid: int, Lp: int, max_new: int) -> None:
         if Lp + max_new > self.core.S:
@@ -650,18 +749,47 @@ class _PagedBackend:
         return self.alloc.can_admit(n_prompt_tokens, reserve=reserve,
                                     ignore_watermark=n_active == 0)
 
-    def admit(self, slot: int, padded, Lp: int, max_new: int) -> None:
+    def admit(self, slot: int, tokens: np.ndarray, Lp: int,
+              max_new: int) -> None:
         c, e = self.core, self.core.engine
-        Lb = padded.shape[1]
-        nbp = -(-Lb // e.block_size)     # static scatter width per bucket
-        ids = self.alloc.alloc(self.alloc.blocks_for(Lp))
-        self.tables.assign(slot, ids)
+        bs = e.block_size
+        tokens = np.asarray(tokens, np.int32)
+        # one hash pass serves both the match and the insert below (the
+        # chain is a prefix hash, so the full-block key list covers the
+        # match's shorter one-token-short cap)
+        keys = self.alloc.chunk_keys(tokens) if self.prefix_cache else None
+        shared = (self.alloc.match(tokens, keys=keys)
+                  if self.prefix_cache else [])
+        P0 = len(shared) * bs                  # cached prefix rows
+        Ls = Lp - P0                           # uncached suffix (>= 1)
+        own = self.alloc.alloc(self.alloc.blocks_for(Lp) - len(shared))
+        assert own is not None, "can_admit must bound admission demand"
+        self.tables.assign(slot, shared + own)
+        self.cached_prefill_tokens += P0
+        self.computed_prefill_tokens += Ls
+        padded = _pad_bucket(tokens[P0:], min(_next_bucket(Ls), c.S - P0))
+        nbp = -(-padded.shape[1] // bs)        # static scatter width
         blk_ids = np.full((nbp,), TRASH_BLOCK, np.int32)
-        blk_ids[:len(ids)] = ids
-        self.pool, c.logits, c.pos, c.done, c.limit = e._admit_paged_fn(
-            c.params, jnp.asarray(padded), jnp.int32(Lp),
-            jnp.int32(max_new), jnp.int32(slot), jnp.asarray(blk_ids),
-            self.pool, c.logits, c.pos, c.done, c.limit)
+        blk_ids[:len(own)] = own
+        if shared:
+            self.pool, c.logits, c.pos, c.done, c.limit = \
+                e._admit_paged_prefix_fn(
+                    c.params, jnp.asarray(padded), jnp.int32(Ls),
+                    jnp.int32(Lp), jnp.int32(max_new), jnp.int32(slot),
+                    jnp.asarray(shared, jnp.int32), jnp.asarray(blk_ids),
+                    self.pool, c.logits, c.pos, c.done, c.limit)
+        else:
+            self.pool, c.logits, c.pos, c.done, c.limit = e._admit_paged_fn(
+                c.params, jnp.asarray(padded), jnp.int32(Lp),
+                jnp.int32(max_new), jnp.int32(slot), jnp.asarray(blk_ids),
+                self.pool, c.logits, c.pos, c.done, c.limit)
+        if self.prefix_cache:
+            # index the prompt's full blocks right away so batchmates —
+            # PPO's k samples of one prompt, chat turns sharing a system
+            # prompt — hit them even before this sequence finishes (the
+            # running slot never writes them: decode appends start at
+            # ``Lp``, strictly past the last full prompt block)
+            self.alloc.insert(tokens, self.tables.blocks[slot], keys=keys)
         self.host_pos[slot] = Lp
         self.host_limit[slot] = Lp + max_new
 
@@ -694,7 +822,7 @@ class _PagedBackend:
     def dispatch(self):
         c, e = self.core, self.core.engine
         self.conc.append(c.n_active)
-        self.used_samples.append(self.alloc.num_used)
+        self.used_samples.append(self.alloc.num_live)
         (c.logits, self.pool, c.key, c.slot_keys, c.pos, c.done), toks, \
             was = e._paged_chunk_fn(
                 c.params, c.logits, self.pool, c.key, c.slot_keys, c.pos,
@@ -704,11 +832,27 @@ class _PagedBackend:
             self.host_pos[b] += e.chunk
         return toks, was
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int,
+                seq_tokens: Optional[np.ndarray] = None) -> None:
+        """Drop the slot's block references.  On a normal harvest
+        (``seq_tokens`` = prompt + generated stream) the sequence's full
+        blocks are first indexed into the prefix cache, so they park in
+        the LRU instead of the free list once unreferenced — except the
+        last block of a FULLY allocated table, whose rows a finished
+        slot's clamped post-EOS writes may have wrapped into (see the
+        module docstring); it is never indexed."""
+        if self.prefix_cache and seq_tokens is not None:
+            blocks = self.tables.blocks[slot]
+            n_ok = len(blocks)
+            if n_ok == self.nbmax:
+                n_ok -= 1
+            self.alloc.insert(seq_tokens, blocks[:n_ok])
         self.tables.release(slot)
 
     def stats(self) -> dict:
         bs = self.core.engine.block_size
+        total_prefill = (self.cached_prefill_tokens
+                         + self.computed_prefill_tokens)
         return {
             "preemptions": self.core.preemptions,
             "max_concurrency": max(self.conc, default=0),
@@ -720,6 +864,12 @@ class _PagedBackend:
             "mean_blocks_used": (float(np.mean(self.used_samples))
                                  if self.used_samples else 0.0),
             "kv_budget_tokens": self.alloc.capacity * bs,
+            "prefix_cache": self.prefix_cache,
+            "cached_prefill_tokens": self.cached_prefill_tokens,
+            "computed_prefill_tokens": self.computed_prefill_tokens,
+            "prefill_hit_rate": (self.cached_prefill_tokens / total_prefill
+                                 if total_prefill else 0.0),
+            **self.alloc.cache_stats(),
         }
 
 
@@ -844,14 +994,16 @@ class EngineCore:
 
     # ---------------------------------------------------------------- #
     def release_slot(self, b: int, *, requeue: bool,
-                     events: Optional[List[StepEvent]] = None) -> None:
-        """Free slot ``b`` (blocks back to the pool under the paged
-        backend); optionally requeue its request at the queue front
-        (preemption).  The slot's device state keeps decoding garbage
-        (dense: into its own arena row; paged: into the trash block)
-        until the next admission resets it — nothing reads it."""
+                     events: Optional[List[StepEvent]] = None,
+                     seq_tokens: Optional[np.ndarray] = None) -> None:
+        """Free slot ``b`` (blocks back to the pool — or, on a harvest
+        with the prefix cache enabled, into the cache LRU — under the
+        paged backend); optionally requeue its request at the queue
+        front (preemption).  The slot's device state keeps decoding
+        garbage (dense: into its own arena row; paged: into the trash
+        block) until the next admission resets it — nothing reads it."""
         a = self.active[b]
-        self.backend.release(b)
+        self.backend.release(b, seq_tokens)
         if requeue and a is not None:
             self.queue.appendleft(a.req)
             self.preemptions += 1
@@ -867,7 +1019,13 @@ class EngineCore:
         self._live.discard(a.req.uid)
         events.append(StepEvent(uid=a.req.uid, new_tokens=new,
                                 finished=True, finish_reason=reason))
-        self.release_slot(b, requeue=False)
+        # harvest the finished stream into the prefix cache (the prompt's
+        # blocks were indexed at admission; this adds the generated
+        # region's full blocks — a cancelled stream is harvested too,
+        # its blocks hold exactly ``prompt + streamed`` rows)
+        seq = np.concatenate([np.asarray(a.req.tokens, np.int32),
+                              np.asarray(a.toks, np.int32)])
+        self.release_slot(b, requeue=False, seq_tokens=seq)
 
     def _process_cancels(self, events: List[StepEvent]) -> None:
         if not self._cancelled:
@@ -921,10 +1079,7 @@ class EngineCore:
         e = self.engine
         temp, top_k, top_p, max_new, eos, seed = e.resolve(r)
         Lp = len(r.tokens)
-        Lb = Lp if e._exact_prefill else min(_next_bucket(Lp), self.S)
-        padded = np.zeros((1, Lb), np.int32)
-        padded[0, :Lp] = np.asarray(r.tokens, np.int32)
-        self.backend.admit(b, padded, Lp, max_new)
+        self.backend.admit(b, np.asarray(r.tokens, np.int32), Lp, max_new)
         self._temp[b], self._topk[b], self._topp[b] = temp, top_k, top_p
         self._eos[b] = -1 if eos is None else eos
         self._own[b] = seed is not None

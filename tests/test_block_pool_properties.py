@@ -1,0 +1,239 @@
+"""Property-based tests for the ref-counted, prefix-caching block pool.
+
+Drives :class:`repro.serving.block_pool.BlockAllocator` through long
+randomized sequences of the operations the serving engine performs —
+admit (match + alloc + insert), decode-time grow (alloc), harvest
+(insert + free), preempt/cancel (free), and raw alloc/free — checking
+after EVERY operation that
+
+- refcounts balance: each block's refcount equals the number of live
+  model sequences that map it,
+- no block is ever double-freed (and an explicit double free raises),
+- free + cached + live block counts always sum to the pool size,
+- the free list, the cache LRU, and the live set never intersect,
+- an allocation succeeds iff ``available`` (free + evictable cached)
+  covers it, regardless of how much is parked in the cache.
+
+Runs through the ``tests/_hyp.py`` shim: full hypothesis shrinking when
+the real package is installed, a deterministic seeded sampler on the
+bare tier-1 image.  10 examples x 120 operations = 1200 randomized
+allocator cycles per run.
+"""
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.serving.block_pool import TRASH_BLOCK, BlockAllocator, blocks_for
+
+
+def _check(a: BlockAllocator, live: dict) -> None:
+    """Cross-check the allocator against the model of live sequences."""
+    a.check_invariants()
+    want = Counter()
+    for _, ids in live.values():
+        want.update(ids)
+    for b in range(1, a.num_blocks):
+        assert a.refcount(b) == want.get(b, 0), \
+            f"block {b}: ref {a.refcount(b)} != {want.get(b, 0)} owners"
+    n_live_blocks = len(want)
+    assert a.num_live == n_live_blocks
+    assert a.num_live + a.num_cached + a.num_free == a.capacity
+
+
+def _run_cycles(seed: int, n_ops: int, num_blocks: int, block_size: int,
+                vocab: int, max_len: int) -> dict:
+    """One randomized episode; returns op counts so callers can assert
+    the interesting paths actually ran."""
+    rng = np.random.default_rng(seed)
+    a = BlockAllocator(num_blocks, block_size)
+    live = {}                       # handle -> (tokens, ids)
+    gen_suffix = {}                 # handle -> generated tokens
+    next_h = 0
+    ops = Counter()
+
+    for _ in range(n_ops):
+        op = rng.random()
+        if op < 0.45 or not live:
+            # admit: match the longest cached prefix, alloc the rest,
+            # index the prompt's full blocks (tiny vocab + short lengths
+            # make shared prefixes and duplicate content common)
+            L = int(rng.integers(1, max_len + 1))
+            tokens = rng.integers(0, vocab, size=L).astype(np.int32)
+            matched = a.match(tokens)
+            need = blocks_for(L, block_size) - len(matched)
+            own = a.alloc(need)
+            if own is None:                    # pool full: roll back refs
+                assert need > a.available
+                if matched:
+                    a.free(matched)
+                ops["admit_denied"] += 1
+            else:
+                ids = matched + own
+                a.insert(tokens, ids)
+                live[next_h] = (tokens, ids)
+                gen_suffix[next_h] = rng.integers(
+                    0, vocab, size=int(rng.integers(0, 2 * block_size))
+                ).astype(np.int32)
+                next_h += 1
+                ops["admit"] += 1
+                ops["admit_shared"] += bool(matched)
+        elif op < 0.65:
+            # decode-time grow: extend a live sequence by 1-2 blocks
+            h = int(rng.choice(list(live)))
+            tokens, ids = live[h]
+            got = a.alloc(int(rng.integers(1, 3)))
+            if got is not None:
+                live[h] = (tokens, ids + got)
+                ops["grow"] += 1
+            else:
+                ops["grow_denied"] += 1
+        elif op < 0.9:
+            # harvest: index prompt + generated full blocks, then drop
+            # the slot's references (blocks park in the LRU if indexed)
+            h = int(rng.choice(list(live)))
+            tokens, ids = live.pop(h)
+            seq = np.concatenate([tokens, gen_suffix.pop(h)])
+            a.insert(seq, ids[:len(seq) // block_size])
+            a.free(ids)
+            ops["harvest"] += 1
+        else:
+            # preempt/cancel: free without harvesting the generated tail
+            h = int(rng.choice(list(live)))
+            _, ids = live.pop(h)
+            gen_suffix.pop(h)
+            a.free(ids)
+            ops["release"] += 1
+        _check(a, live)
+
+    # drain: releasing everything restores free + cached == capacity
+    for h in list(live):
+        a.free(live.pop(h)[1])
+        gen_suffix.pop(h, None)
+        _check(a, live)
+    assert a.num_free + a.num_cached == a.capacity
+    assert a.num_live == 0
+    return ops
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_pool_invariants_random_cycles(seed):
+    """1k+ randomized admit/grow/harvest/release cycles on a small pool
+    with a tiny vocab (forcing prefix sharing, duplicate content, LRU
+    revival, and eviction) keep every pool invariant intact."""
+    ops = _run_cycles(seed, n_ops=120, num_blocks=17, block_size=2,
+                      vocab=3, max_len=10)
+    # the episode must actually exercise the machinery it claims to
+    assert ops["admit"] > 0 and ops["harvest"] > 0
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 5))
+@settings(max_examples=5, deadline=None)
+def test_pool_invariants_varied_geometry(seed, block_size):
+    """Same episode over varied block sizes and a larger vocab (fewer
+    hits, more allocator churn)."""
+    _run_cycles(seed, n_ops=60, num_blocks=11, block_size=block_size,
+                vocab=8, max_len=4 * block_size)
+
+
+def test_sharing_refcounts_and_lru_revival():
+    """Deterministic walk of the share/park/revive/evict lifecycle."""
+    a = BlockAllocator(6, 2)                     # 5 usable blocks
+    toks = np.array([1, 2, 3, 4, 5], np.int32)   # 2 full blocks + tail
+    ids = a.alloc(3)
+    a.insert(toks, ids)
+    _check(a, {0: (toks, ids)})
+
+    m = a.match(toks)                            # cap: (5-1)//2 = 2 blocks
+    assert m == ids[:2]
+    assert a.refcount(ids[0]) == 2 and a.refcount(ids[2]) == 1
+    _check(a, {0: (toks, ids), 1: (toks, m)})
+
+    a.free(ids)                                  # first owner gone
+    assert a.refcount(ids[0]) == 1               # still shared
+    assert ids[2] in a._free_set                 # unindexed tail: free list
+    _check(a, {1: (toks, m)})
+
+    a.free(m)                                    # last owner gone
+    assert a.num_cached == 2 and a.num_live == 0 # parked in the LRU
+    _check(a, {})
+
+    m2 = a.match(toks)                           # revive from the LRU
+    assert m2 == ids[:2] and a.num_cached == 0
+    a.free(m2)
+
+    got = a.alloc(5)                             # forces LRU eviction
+    assert got is not None and a.evictions == 2
+    assert a.num_cached == 0 and len(a._index) == 0
+    a.free(got)
+    _check(a, {})
+
+
+def test_eviction_consumes_chains_leaf_first():
+    """A radix chain is only matchable from its root, so a harvested
+    chain must park leaf-first: partial eviction trims the chain's TAIL
+    and the surviving prefix stays matchable (parking root-first would
+    evict the root ahead of its descendants, leaving them parked but
+    unmatchable)."""
+    from repro.serving.block_pool import BlockTables
+    a = BlockAllocator(8, 2)                     # 7 usable blocks
+    tables = BlockTables(a, slots=1, nbmax=4)
+    toks = np.array([1, 2, 3, 4, 5, 6, 7], np.int32)   # 3 full blocks
+    ids = a.alloc(4)
+    tables.assign(0, ids)
+    a.insert(toks, ids)
+    tables.release(0)                            # parks leaf-first
+    assert a.num_cached == 3
+    got = a.alloc(5)                             # 4 free + 1 evicted
+    assert a.evictions == 1
+    # the evicted block is the chain's LAST link; the root-side prefix
+    # of the chain still matches
+    m = a.match(toks)
+    assert m == ids[:2]
+    a.free(got)
+    a.free(m)
+    _check(a, {})
+
+
+def test_double_free_detected_through_cache():
+    a = BlockAllocator(5, 2)
+    toks = np.array([7, 7, 7, 7], np.int32)
+    ids = a.alloc(2)
+    a.insert(toks, ids)
+    a.free(ids)                                  # parks both in the LRU
+    with pytest.raises(ValueError):
+        a.free(ids)                              # ref already 0
+    with pytest.raises(ValueError):
+        a.free([TRASH_BLOCK])
+
+
+def test_match_never_covers_whole_prompt():
+    """At least one token is always left to prefill (decode needs the
+    last prompt token's logits), even on a fully cached, block-aligned
+    prompt."""
+    a = BlockAllocator(9, 4)
+    toks = np.arange(8, dtype=np.int32)          # exactly 2 blocks
+    ids = a.alloc(2)
+    a.insert(toks, ids)
+    a.free(ids)
+    assert a.match(toks) == ids[:1]              # cap (8-1)//4 = 1
+    assert a.match(toks[:4]) == []               # cap (4-1)//4 = 0
+
+
+def test_available_counts_cached_blocks_for_admission():
+    """A pool whose capacity is entirely parked in the cache still
+    admits: eviction before preemption."""
+    a = BlockAllocator(5, 2, watermark=1)
+    toks = np.array([1, 2, 3, 4, 5, 6, 7, 8], np.int32)
+    ids = a.alloc(4)
+    a.insert(toks, ids)
+    a.free(ids)
+    assert a.num_free == 0 and a.num_cached == 4
+    assert a.available == 4
+    assert a.can_admit(6)                        # 3 blocks + 1 reserve
+    assert not a.can_admit(8)                    # reserve would break
+    got = a.alloc(3)                             # evicts LRU-first
+    assert got is not None and a.evictions >= 3
+    a.free(got)

@@ -141,7 +141,7 @@ def test_per_request_eos_override():
         KEY, slots=2)
     by = {c.uid: c for c in (stop, run_on)}
     assert by[0].finish_reason == "eos" and by[0].tokens.size == n_stop
-    assert by[0].finished_by_eos                   # compat property
+    assert not hasattr(by[0], "finished_by_eos")   # compat shim removed
     assert by[1].finish_reason == "length" and by[1].tokens.size == 12
 
 

@@ -146,7 +146,6 @@ def test_paged_matches_dense_seeded_sampling():
         PARAMS, reqs, jax.random.PRNGKey(3), **kw)}
     for uid in d:
         np.testing.assert_array_equal(d[uid].tokens, p[uid].tokens)
-        assert d[uid].finished_by_eos == p[uid].finished_by_eos
         assert d[uid].finish_reason == p[uid].finish_reason
 
 

@@ -1,0 +1,323 @@
+"""Prefix-aware KV block reuse (radix cache) through the paged engine:
+cache on/off bit-identity (greedy and seeded, including under
+preemption and mid-flight cancellation), suffix-only prefill
+correctness vs the per-request reference, harvest-then-match across
+requests in one core (multi-turn chat shape), eviction-before-
+preemption transparency, and best-of-n PPO experience generation
+reusing each prompt's prefill."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ppo import PPOConfig, PPOTrainer
+from repro.models.config import ModelConfig
+from repro.models import reward as R
+from repro.models import transformer as T
+from repro.serving.engine import GenerationEngine, Request, SamplingParams
+from repro.serving.generate import generate
+
+V = 64
+CFG = ModelConfig(name="prefix", arch_type="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=V,
+                  compute_dtype="float32", remat=False)
+KEY = jax.random.PRNGKey(0)
+PARAMS = T.init_params(CFG, KEY)
+
+
+def _engine(prefix_cache, bs=4, **kw):
+    kw.setdefault("max_new_tokens", 8)
+    kw.setdefault("temperature", 0.0)
+    kw.setdefault("chunk", 4)
+    return GenerationEngine(CFG, kv_layout="paged", block_size=bs,
+                            prefix_cache=prefix_cache, **kw)
+
+
+def _shared_prefix_requests(n=6, prefix_len=13, seed=7, max_new=8):
+    """Chat-with-shared-system-prompt traffic: one long shared prefix,
+    short unique tails."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, V, size=prefix_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, V,
+                            size=int(rng.integers(2, 6))).astype(np.int32)
+        reqs.append(Request(uid=i,
+                            tokens=np.concatenate([sys_prompt, tail]),
+                            max_new_tokens=max_new))
+    return reqs
+
+
+def _distinct_requests(lengths, budgets, seed=11):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    tokens=rng.integers(0, V, size=lp).astype(np.int32),
+                    max_new_tokens=mn)
+            for i, (lp, mn) in enumerate(zip(lengths, budgets))]
+
+
+def _drain(core):
+    events = []
+    while core.has_work():
+        events.extend(core.step())
+    return events
+
+
+# ------------------------------------------------------------------ #
+# cache on/off token identity
+# ------------------------------------------------------------------ #
+def test_cache_on_off_identity_greedy_and_vs_reference():
+    """Shared-prefix greedy streams are bit-identical with the cache on
+    vs off, the cache measurably hits, and both match the per-request
+    fixed-scan reference."""
+    reqs = _shared_prefix_requests()
+    kw = dict(slots=3, max_seq_len=32)
+    off_eng, on_eng = _engine(False), _engine(True)
+    off = {c.uid: c for c in off_eng.serve(PARAMS, reqs,
+                                           jax.random.PRNGKey(3), **kw)}
+    on = {c.uid: c for c in on_eng.serve(PARAMS, reqs,
+                                         jax.random.PRNGKey(3), **kw)}
+    assert sorted(on) == sorted(off) == list(range(len(reqs)))
+    for uid in off:
+        np.testing.assert_array_equal(off[uid].tokens, on[uid].tokens)
+        assert off[uid].finish_reason == on[uid].finish_reason
+    st_on, st_off = on_eng.last_stats, off_eng.last_stats
+    assert st_on["prefill_hit_rate"] > 0
+    assert st_off["cached_prefill_tokens"] == 0
+    assert (st_on["computed_prefill_tokens"]
+            < st_off["computed_prefill_tokens"])
+    for uid, c in on.items():
+        r = reqs[uid]
+        ref = generate(CFG, PARAMS, jnp.asarray(r.tokens)[None], KEY,
+                       max_new_tokens=r.max_new_tokens, temperature=0.0)
+        np.testing.assert_array_equal(
+            c.tokens, np.asarray(ref["sequences"][0, len(r.tokens):]))
+
+
+def test_cache_on_off_identity_seeded_sampling():
+    """Stochastic identity: same admission order => same PRNG stream =>
+    bit-identical tokens whether prompts prefilled fully or from the
+    radix cache (mixed shared-key and per-request-seeded requests)."""
+    reqs = _shared_prefix_requests(n=5, max_new=8)
+    reqs = [Request(uid=r.uid, tokens=r.tokens,
+                    max_new_tokens=r.max_new_tokens,
+                    params=SamplingParams(seed=100 + r.uid)
+                    if r.uid % 2 else SamplingParams())
+            for r in reqs]
+    mk = lambda pc: _engine(pc, temperature=1.0, top_k=8, eos_id=V - 1)
+    kw = dict(slots=2, max_seq_len=32)
+    off = {c.uid: c for c in mk(False).serve(PARAMS, reqs,
+                                             jax.random.PRNGKey(5), **kw)}
+    on_eng = mk(True)
+    on = {c.uid: c for c in on_eng.serve(PARAMS, reqs,
+                                         jax.random.PRNGKey(5), **kw)}
+    assert on_eng.last_stats["prefill_hit_rate"] > 0
+    for uid in off:
+        np.testing.assert_array_equal(off[uid].tokens, on[uid].tokens)
+        assert off[uid].finish_reason == on[uid].finish_reason
+
+
+def test_cache_on_off_identity_under_preemption():
+    """A pool sized for ~1 request forces preemptions; with distinct
+    prompts (usage identical either way) the cache must be fully
+    transparent: same streams, same preemption count — while its
+    harvest-to-LRU and eviction paths run underneath."""
+    reqs = _distinct_requests([3, 9, 4, 7, 5, 6], [5, 6, 7, 3, 6, 4])
+    kw = dict(slots=3, max_seq_len=20, num_blocks=6, watermark=0)
+    mk = lambda pc: _engine(pc, chunk=2)
+    off_eng, on_eng = mk(False), mk(True)
+    off = {c.uid: c for c in off_eng.serve(PARAMS, reqs,
+                                           jax.random.PRNGKey(5), **kw)}
+    on = {c.uid: c for c in on_eng.serve(PARAMS, reqs,
+                                         jax.random.PRNGKey(5), **kw)}
+    st_on, st_off = on_eng.last_stats, off_eng.last_stats
+    assert st_off["preemptions"] > 0
+    assert st_on["preemptions"] == st_off["preemptions"]
+    assert st_on["cache_evictions"] > 0          # eviction ran underneath
+    for uid in off:
+        np.testing.assert_array_equal(off[uid].tokens, on[uid].tokens)
+    for uid, c in on.items():
+        r = reqs[uid]
+        ref = generate(CFG, PARAMS, jnp.asarray(r.tokens)[None], KEY,
+                       max_new_tokens=r.max_new_tokens, temperature=0.0)
+        np.testing.assert_array_equal(
+            c.tokens, np.asarray(ref["sequences"][0, len(r.tokens):]))
+
+
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_cache_identity_under_cancellation(prefix_cache):
+    """Mid-flight cancellation with the cache on behaves exactly as
+    off: the cancelled stream is a prefix of the solo run, its blocks
+    are reclaimed (refcounts drop to zero), and the queued requests
+    complete with reference-identical streams."""
+    reqs = _shared_prefix_requests(n=3, max_new=12)
+    eng = _engine(prefix_cache, max_new_tokens=12)
+    core = eng.core(PARAMS, KEY, slots=1, max_seq_len=32)
+    for r in reqs:
+        core.add_request(r)
+    got = core.step()                       # uid 0 admitted + 1 chunk
+    assert [ev.uid for ev in got] == [0] and not got[0].finished
+    partial = got[0].new_tokens.copy()
+    assert core.cancel(0)
+    events = _drain(core)
+    assert sorted(ev.uid for ev in events
+                  if ev.finish_reason == "cancelled") == [0]
+    done = {ev.uid for ev in events if ev.finished}
+    assert done == {0, 1, 2}
+    solo = generate(CFG, PARAMS, jnp.asarray(reqs[0].tokens)[None], KEY,
+                    max_new_tokens=12, temperature=0.0)
+    np.testing.assert_array_equal(
+        partial,
+        np.asarray(solo["sequences"][0, len(reqs[0].tokens):][:partial.size]))
+    alloc = core.backend.alloc
+    assert alloc.num_live == 0                   # every reference dropped
+    assert alloc.num_free + alloc.num_cached == alloc.capacity
+    if prefix_cache:
+        assert alloc.num_cached > 0              # harvested, not freed
+
+
+# ------------------------------------------------------------------ #
+# cache mechanics through the core
+# ------------------------------------------------------------------ #
+def test_harvest_then_match_multi_turn():
+    """Multi-turn chat shape on ONE core: turn 2's prompt extends turn
+    1's full stream, so its prefill is served almost entirely from
+    harvested blocks — and the tokens still match the fixed-scan
+    reference (harvested KV is intact)."""
+    rng = np.random.default_rng(2)
+    eng = _engine(True, max_new_tokens=6)
+    core = eng.core(PARAMS, KEY, slots=2, max_seq_len=48)
+    t1 = rng.integers(0, V, size=11).astype(np.int32)
+    core.add_request(Request(uid=0, tokens=t1))
+    events = _drain(core)
+    gen1 = np.concatenate([ev.new_tokens for ev in events
+                           if ev.uid == 0]).astype(np.int32)
+
+    turn2 = np.concatenate([t1, gen1,
+                            rng.integers(0, V, size=5).astype(np.int32)])
+    before = core.backend.cached_prefill_tokens
+    core.add_request(Request(uid=1, tokens=turn2))
+    events = _drain(core)
+    gen2 = np.concatenate([ev.new_tokens for ev in events
+                           if ev.uid == 1]).astype(np.int32)
+    hit = core.backend.cached_prefill_tokens - before
+    assert hit >= (len(t1) + len(gen1)) // eng.block_size * eng.block_size \
+        - eng.block_size                         # most of turn 1 reused
+    assert hit > 0
+    ref = generate(CFG, PARAMS, jnp.asarray(turn2)[None], KEY,
+                   max_new_tokens=6, temperature=0.0)
+    np.testing.assert_array_equal(
+        gen2, np.asarray(ref["sequences"][0, len(turn2):]))
+
+
+def test_eviction_before_preemption_sequential():
+    """slots=1 over many distinct prompts on a small pool: the cache
+    fills with harvested blocks, later admissions evict them instead of
+    wedging, and nothing is ever preempted."""
+    reqs = _distinct_requests([6, 7, 5, 8, 6, 7], [4] * 6)
+    eng = _engine(True)
+    outs = eng.serve(PARAMS, reqs, jax.random.PRNGKey(1), slots=1,
+                     max_seq_len=16, num_blocks=9)
+    assert sorted(c.uid for c in outs) == list(range(6))
+    st = eng.last_stats
+    assert st["preemptions"] == 0
+    assert st["cache_evictions"] > 0
+    for c in outs:
+        r = reqs[c.uid]
+        ref = generate(CFG, PARAMS, jnp.asarray(r.tokens)[None], KEY,
+                       max_new_tokens=r.max_new_tokens, temperature=0.0)
+        np.testing.assert_array_equal(
+            c.tokens, np.asarray(ref["sequences"][0, len(r.tokens):]))
+
+
+def test_shared_blocks_survive_first_finisher():
+    """When the first sharer finishes, the blocks it shares stay live
+    for its batchmates (refcount, not ownership): the laggards' streams
+    still match the reference."""
+    reqs = _shared_prefix_requests(n=3, prefix_len=12, max_new=3)
+    # make uid 0 finish long before the others
+    reqs = [Request(uid=r.uid, tokens=r.tokens,
+                    max_new_tokens=3 if r.uid == 0 else 10)
+            for r in reqs]
+    eng = _engine(True, max_new_tokens=10, chunk=2)
+    outs = {c.uid: c for c in eng.serve(PARAMS, reqs, KEY, slots=3,
+                                        max_seq_len=32)}
+    for uid, c in outs.items():
+        r = reqs[uid]
+        ref = generate(CFG, PARAMS, jnp.asarray(r.tokens)[None], KEY,
+                       max_new_tokens=r.max_new_tokens, temperature=0.0)
+        np.testing.assert_array_equal(
+            c.tokens, np.asarray(ref["sequences"][0, len(r.tokens):]))
+    assert eng.last_stats["prefill_hit_rate"] > 0
+
+
+def test_prefix_cache_rejects_dense_layout():
+    with pytest.raises(ValueError):
+        GenerationEngine(CFG, max_new_tokens=4, prefix_cache=True)
+
+
+# ------------------------------------------------------------------ #
+# PPO best-of-n through the prefix cache
+# ------------------------------------------------------------------ #
+def test_ppo_best_of_n_reuses_prompt_prefill():
+    trainer = PPOTrainer(
+        actor_cfg=CFG, critic_cfg=CFG, actor_params=PARAMS,
+        critic_params=R.init_params(CFG, KEY), ref_params=PARAMS,
+        reward_params=R.init_params(CFG, KEY),
+        ppo=PPOConfig(max_new_tokens=5, eos_id=3, use_ema=False,
+                      decode_chunk=4, n_samples_per_prompt=3,
+                      kv_layout="paged", kv_block_size=4,
+                      prefix_cache=True))
+    rng = np.random.default_rng(4)
+    reqs = [Request(uid=0,
+                    tokens=rng.integers(0, V, size=9).astype(np.int32),
+                    max_new_tokens=5,
+                    params=SamplingParams(temperature=0.0)),
+            Request(uid=1,
+                    tokens=rng.integers(0, V, size=13).astype(np.int32),
+                    max_new_tokens=5,
+                    params=SamplingParams(seed=21))]
+    exp, gm = trainer.generate_experience(reqs, jax.random.PRNGKey(8))
+    assert exp.sequences.shape[0] == 6           # 2 prompts x 3 samples
+    # the 2nd/3rd sample of each prompt prefills only the tail chunk
+    assert gm["prefill_hit_rate"] > 0
+    seqs = np.asarray(exp.sequences)
+    # greedy copies are identical; seeded copies draw per-copy seeds
+    np.testing.assert_array_equal(seqs[0], seqs[1])
+    np.testing.assert_array_equal(seqs[1], seqs[2])
+    assert not (seqs[3] == seqs[4]).all() or not (seqs[4] == seqs[5]).all()
+    m = trainer.train_rlhf(exp)
+    assert all(np.isfinite(v) for v in m.values())
+
+
+def test_ppo_best_of_n_fixed_shape_tiles_rows():
+    """The fixed-shape (B, Lp) prompt path honors n_samples_per_prompt
+    by row-tiling — it must not be silently ignored."""
+    trainer = PPOTrainer(
+        actor_cfg=CFG, critic_cfg=CFG, actor_params=PARAMS,
+        critic_params=R.init_params(CFG, KEY), ref_params=PARAMS,
+        reward_params=R.init_params(CFG, KEY),
+        ppo=PPOConfig(max_new_tokens=4, use_ema=False, decode_chunk=4,
+                      n_samples_per_prompt=2))
+    prompts = jnp.arange(12, dtype=jnp.int32).reshape(2, 6) % V
+    exp, gm = trainer.generate_experience(prompts, jax.random.PRNGKey(2))
+    assert exp.sequences.shape == (4, 10)        # 2 prompts x 2 samples
+    seqs = np.asarray(exp.sequences)
+    np.testing.assert_array_equal(seqs[0, :6], seqs[1, :6])  # same prompt
+    np.testing.assert_array_equal(seqs[2, :6], seqs[3, :6])
+    assert np.isfinite(gm["reward_score"])
+
+
+def test_ppo_n_samples_default_unchanged():
+    """n_samples_per_prompt=1 (default) leaves the request path exactly
+    as before: one row per request, user uids preserved."""
+    trainer = PPOTrainer(
+        actor_cfg=CFG, critic_cfg=CFG, actor_params=PARAMS,
+        critic_params=R.init_params(CFG, KEY), ref_params=PARAMS,
+        reward_params=R.init_params(CFG, KEY),
+        ppo=PPOConfig(max_new_tokens=4, use_ema=False, decode_chunk=4))
+    reqs = [Request(uid=5, tokens=np.arange(6, dtype=np.int32),
+                    max_new_tokens=4)]
+    exp, gm = trainer.generate_experience(reqs, jax.random.PRNGKey(1))
+    assert exp.sequences.shape == (1, 10)
+    assert "prefill_hit_rate" not in gm          # dense engine

@@ -45,6 +45,23 @@ def test_scheduler_continuous_paged_pool_flags(monkeypatch, capsys):
     assert "kv=paged" in out and "blocks=16" in out
 
 
+def test_prefix_cache_flag(monkeypatch, capsys):
+    """--prefix-cache on: a shared-prefix synthetic queue (fixed
+    --prompt-len, no --ragged, so every prompt shares shape) drains with
+    the radix cache and the summary prints its hit-rate stats."""
+    out = _run(monkeypatch, capsys, "--scheduler", "continuous",
+               "--kv-layout", "paged", "--block-size", "4",
+               "--prefix-cache", "on")
+    assert "kv=paged" in out and "prefix-cache: hit_rate=" in out
+    assert "evictions=" in out
+
+
+def test_prefix_cache_requires_paged(monkeypatch, capsys):
+    with pytest.raises(SystemExit):
+        _run(monkeypatch, capsys, "--kv-layout", "dense",
+             "--prefix-cache", "on")
+
+
 def test_ckpt_flag_loads_params(monkeypatch, capsys, tmp_path):
     cfg = reduced(get_config("smollm-135m"))
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -60,6 +77,21 @@ def test_chat_flag(monkeypatch, capsys):
     monkeypatch.setattr("builtins.input", lambda *_: next(lines))
     out = _run(monkeypatch, capsys, "--chat")
     assert "chat mode" in out and "Assistant:" in out
+
+
+def test_chat_multi_turn_prefix_cache(monkeypatch, capsys):
+    """Two chat turns on the persistent core with the radix cache: turn
+    2's prompt extends turn 1's conversation, so its prefill hits the
+    harvested history blocks (the per-turn hit line reports > 0)."""
+    lines = iter(["hello there friend", "and again", ""])
+    monkeypatch.setattr("builtins.input", lambda *_: next(lines))
+    out = _run(monkeypatch, capsys, "--chat", "--kv-layout", "paged",
+               "--block-size", "4", "--prefix-cache", "on")
+    hits = [l for l in out.splitlines() if "served from cache" in l]
+    assert len(hits) == 2
+    assert hits[0].lstrip().startswith("[prefix-cache: 0/")  # cold turn 1
+    turn2 = int(hits[1].split(":")[1].strip().split("/")[0])
+    assert turn2 > 0                                         # warm turn 2
 
 
 def test_requests_jsonl_with_per_request_sampling(monkeypatch, capsys,
