@@ -317,11 +317,18 @@ def run():
 
 def main(argv=None):
     """CLI entrypoint; ``--smoke`` runs CI-sized measured rows only (the
-    analytic fig6 sweep and full-size measurements are skipped)."""
+    analytic fig6 sweep and full-size measurements are skipped);
+    ``--json PATH`` additionally writes the rows as a JSON object
+    (``{name: {"value": ..., "note": ...}}``) — the CI benchmarks job
+    uploads it as an artifact and diffs it against
+    ``benchmarks/baseline.json`` via ``tools/bench_compare.py``."""
     import argparse
+    import json
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="scaled-down measured rows for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON for bench_compare")
     args = ap.parse_args(argv)
     if args.smoke:
         rows = (measured_serving_rows(n=10, max_new=12)
@@ -331,6 +338,12 @@ def main(argv=None):
         rows = run()
     for name, val, note in rows:
         print(f"{name},{val:.4g},{note}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({name: {"value": float(val), "note": note}
+                       for name, val, note in rows}, f, indent=2,
+                      sort_keys=True)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

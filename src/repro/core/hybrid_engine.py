@@ -19,6 +19,7 @@ analogues.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -32,12 +33,27 @@ from repro.models.config import ModelConfig
 from repro.sharding import strategy as S
 
 
+def _tree_device_bytes(tree) -> int:
+    """Bytes this tree actually occupies across addressable devices —
+    replicas counted once per device (the quantity a reshard changes)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shards = getattr(leaf, "addressable_shards", None)
+        if shards is None:
+            total += leaf.size * leaf.dtype.itemsize
+        else:
+            total += sum(s.data.size * s.data.dtype.itemsize
+                         for s in shards)
+    return total
+
+
 @dataclasses.dataclass
 class HybridEngine:
     cfg: ModelConfig
     mesh: Mesh
     train_strategy: str = "zero3"
     infer_strategy: str = "tp"
+    zero: int = 1                      # ZeRO stage for the optimizer state
 
     def __post_init__(self):
         self.train_pspecs = S.param_pspecs(self.cfg, self.mesh,
@@ -52,20 +68,69 @@ class HybridEngine:
                                  out_shardings=self.infer_shardings)
         self._to_train = jax.jit(lambda p: p,
                                  out_shardings=self.train_shardings)
+        # measured (not estimated) stats of the LAST phase transition:
+        # wall time around block_until_ready plus the per-device byte
+        # delta read off the actual output arrays' shards
+        self.last_reshard_stats: dict = {}
+        self._warm: set = set()        # directions already traced/compiled
 
     # ---------------------------------------------------------------- #
     # phase transitions (the Hybrid Engine switch)
     # ---------------------------------------------------------------- #
-    def to_inference(self, params):
-        """Enter generation mode: ONE all-gather pass over the params."""
+    def _reshard(self, fn, params, direction: str):
+        in_bytes = _tree_device_bytes(params)
+        first = direction not in self._warm
+        t0 = time.perf_counter()
         with self.mesh:
-            return self._to_infer(params)
+            out = fn(params)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        self._warm.add(direction)
+        out_bytes = _tree_device_bytes(out)
+        # an all-gather materializes exactly the replica bytes the input
+        # didn't hold (receive-side traffic); the reverse slice frees
+        # them.  `first_call` marks a timing that includes trace+compile
+        # of the reshard graph — consumers comparing transfer cost
+        # should look at steady-state (first_call=False) samples.
+        self.last_reshard_stats = {
+            "direction": direction,
+            "seconds": dt,
+            "first_call": first,
+            "in_bytes": in_bytes,
+            "out_bytes": out_bytes,
+            "gathered_bytes": max(out_bytes - in_bytes, 0),
+            "freed_bytes": max(in_bytes - out_bytes, 0),
+        }
+        return out
+
+    def to_inference(self, params):
+        """Enter generation mode: ONE all-gather pass over the params,
+        measured (bytes + wall time) into ``last_reshard_stats``."""
+        return self._reshard(self._to_infer, params, "to_inference")
 
     def to_train(self, params):
         """Back to training mode (a slice per param — no communication
         beyond discarding replicas)."""
-        with self.mesh:
-            return self._to_train(params)
+        return self._reshard(self._to_train, params, "to_train")
+
+    # ---------------------------------------------------------------- #
+    # training-side layouts (the sharded PPO step consumes these)
+    # ---------------------------------------------------------------- #
+    def train_state_shardings(self, cfg: Optional[ModelConfig] = None,
+                              specs=None):
+        """NamedShardings for a full TrainState in the training layout:
+        ``train_strategy`` params, ``zero``-staged optimizer moments.
+        ``specs`` overrides the param-spec tree (the critic's value-head
+        structure)."""
+        return S.train_state_shardings(cfg or self.cfg, self.mesh,
+                                       self.train_strategy, zero=self.zero,
+                                       specs=specs)
+
+    def shard_train_state(self, state, cfg: Optional[ModelConfig] = None,
+                          specs=None):
+        """Place a TrainState into the training layout (one collective)."""
+        return jax.device_put(state,
+                              self.train_state_shardings(cfg, specs))
 
     # ---------------------------------------------------------------- #
     # generation engine (the serving-grade experience-generation path)
@@ -80,9 +145,17 @@ class HybridEngine:
         returns the stepwise request-level core
         (:class:`repro.serving.engine.EngineCore`): ``add_request`` /
         ``step`` / ``cancel`` with per-request sampling params, used by
-        both the serve launcher and ragged PPO experience generation."""
+        both the serve launcher and ragged PPO experience generation.
+
+        On a multi-device mesh the engine is handed the mesh so its KV
+        cache is laid out per-device (batch over ``data``, KV length
+        over ``model`` where divisible) to match the TP params it
+        consumes; a 1-device mesh keeps the historical unsharded
+        graphs."""
         from repro.serving.engine import GenerationEngine
-        return GenerationEngine(self.cfg, **gen_kwargs)
+        mesh = self.mesh if np.prod(
+            list(self.mesh.shape.values())) > 1 else None
+        return GenerationEngine(self.cfg, mesh=mesh, **gen_kwargs)
 
     # ---------------------------------------------------------------- #
     # analytics (feed benchmarks/phase_breakdown + effective_throughput)

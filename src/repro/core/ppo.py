@@ -17,9 +17,12 @@ import time
 from functools import partial
 from typing import Any, Optional
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import ema as EMA
 from repro.core import experience as X
@@ -161,7 +164,34 @@ class PPOTrainer:
         self.ref_params = ref_params
         self.reward_params = reward_params
         self.engine = engine
-        self.ema = EMA.init(actor_params) if ppo.use_ema else None
+        self.mesh = engine.mesh if engine is not None else None
+        self._multi = (self.mesh is not None and int(np.prod(
+            list(self.mesh.shape.values()))) > 1)
+
+        if self._multi:
+            from repro.sharding import strategy as S
+            # training layout: `train_strategy` params, ZeRO-`zero` fp32
+            # Adam moments (sharded over the data axes); frozen scoring
+            # models live in the TP layout (they are only ever read).
+            # The critic/reward trees carry the value-head structure, so
+            # their shardings resolve from reward.param_specs.
+            crit_specs = R.param_specs(critic_cfg)
+            self.actor = engine.shard_train_state(self.actor, actor_cfg)
+            self.critic = engine.shard_train_state(self.critic, critic_cfg,
+                                                   specs=crit_specs)
+            self.ref_params = jax.device_put(
+                ref_params, S.param_shardings(actor_cfg, self.mesh, "tp"))
+            self.reward_params = jax.device_put(
+                reward_params, S.shardings_for_tree(crit_specs, self.mesh,
+                                                    "tp"))
+            # activation constraints inside the loss forwards: batch over
+            # `data` (keeps GSPMD from replicating activations)
+            actor_cfg = actor_cfg.replace(batch_axes=("data",),
+                                          tp_axis="model")
+            critic_cfg = critic_cfg.replace(batch_axes=("data",),
+                                            tp_axis="model")
+        self._step_actor_cfg, self._step_critic_cfg = actor_cfg, critic_cfg
+        self.ema = EMA.init(self.actor.params) if ppo.use_ema else None
 
         gen_opts = dict(max_new_tokens=ppo.max_new_tokens,
                         temperature=ppo.temperature, top_k=ppo.top_k,
@@ -171,11 +201,44 @@ class PPOTrainer:
                         prefix_cache=ppo.prefix_cache)
         self.gen_engine = (engine.generation_engine(**gen_opts)
                            if engine is not None
-                           else GenerationEngine(actor_cfg, **gen_opts))
-        self._mk_exp = jax.jit(partial(make_experience, actor_cfg,
-                                       critic_cfg, ppo))
-        self._actor_step = jax.jit(partial(actor_step, actor_cfg, ppo))
-        self._critic_step = jax.jit(partial(critic_step, critic_cfg, ppo))
+                           else GenerationEngine(self.actor_cfg, **gen_opts))
+        if self._multi:
+            # jit the PPO step AGAINST the mesh: the state pins back to
+            # the training layout every step (one compile across steps —
+            # input layouts are committed by device_put), metrics come
+            # back replicated
+            a_sh = engine.train_state_shardings(self.actor_cfg)
+            c_sh = engine.train_state_shardings(
+                self.critic_cfg, specs=R.param_specs(self.critic_cfg))
+            rep = NamedSharding(self.mesh, P())
+            self._mk_exp = jax.jit(partial(make_experience, actor_cfg,
+                                           critic_cfg, ppo))
+            self._actor_step = jax.jit(partial(actor_step, actor_cfg, ppo),
+                                       out_shardings=(a_sh, rep))
+            self._critic_step = jax.jit(
+                partial(critic_step, critic_cfg, ppo),
+                out_shardings=(c_sh, rep))
+        else:
+            self._mk_exp = jax.jit(partial(make_experience, actor_cfg,
+                                           critic_cfg, ppo))
+            self._actor_step = jax.jit(partial(actor_step, actor_cfg, ppo))
+            self._critic_step = jax.jit(partial(critic_step, critic_cfg,
+                                                ppo))
+
+    # -------------------------------------------------------------- #
+    def _mesh_ctx(self):
+        """Active-mesh context for tracing `PartitionSpec`-based
+        constraints (no-op single-device)."""
+        return self.mesh if self._multi else contextlib.nullcontext()
+
+    def _shard_batch(self, tree):
+        """Commit a batch pytree to the data axis (leading dim) when the
+        mesh is multi-device and the batch divides it; replicate
+        otherwise.  Stable input layouts = no retrace across steps."""
+        if not self._multi or tree is None:
+            return tree
+        from repro.sharding import strategy as S
+        return S.shard_batch(tree, self.mesh)
 
     # -------------------------------------------------------------- #
     def generate_experience(self, prompts, key):
@@ -207,14 +270,19 @@ class PPOTrainer:
         jax.block_until_ready(out["sequences"])
         gen_s = time.perf_counter() - t0
         n_gen = float(out["response_mask"].sum())
-        exp, score = self._mk_exp(self.actor.params, self.ref_params,
-                                  self.critic.params, self.reward_params,
-                                  out["sequences"], out["response_mask"])
-        return exp, {"reward_score": float(score.mean()),
-                     "gen_len": float(out["response_mask"].sum(1).mean()),
-                     "gen_tok_s": n_gen / max(gen_s, 1e-9),
-                     "decode_steps": float(
-                         self.gen_engine.last_stats["decode_steps"])}
+        seqs, mask = self._shard_batch((out["sequences"],
+                                        out["response_mask"]))
+        with self._mesh_ctx():
+            exp, score = self._mk_exp(self.actor.params, self.ref_params,
+                                      self.critic.params,
+                                      self.reward_params, seqs, mask)
+        gm = {"reward_score": float(score.mean()),
+              "gen_len": float(out["response_mask"].sum(1).mean()),
+              "gen_tok_s": n_gen / max(gen_s, 1e-9),
+              "decode_steps": float(
+                  self.gen_engine.last_stats["decode_steps"])}
+        self._add_reshard_metrics(gm)
+        return exp, gm
 
     def _expand_samples(self, requests):
         """Best-of-n expansion: replicate each request
@@ -270,10 +338,13 @@ class PPOTrainer:
         sequences = jnp.asarray(seqs)
         response_mask = jnp.asarray(resp)
         n_gen = float(response_mask.sum())
-        exp, score = self._mk_exp(self.actor.params, self.ref_params,
-                                  self.critic.params, self.reward_params,
-                                  sequences, response_mask,
-                                  jnp.asarray(attn))
+        sequences, resp_m, attn_m = self._shard_batch(
+            (sequences, response_mask, jnp.asarray(attn)))
+        with self._mesh_ctx():
+            exp, score = self._mk_exp(self.actor.params, self.ref_params,
+                                      self.critic.params,
+                                      self.reward_params, sequences,
+                                      resp_m, attn_m)
         gm = {"reward_score": float(score.mean()),
               "gen_len": float(response_mask.sum(1).mean()),
               "gen_tok_s": n_gen / max(gen_s, 1e-9),
@@ -281,12 +352,28 @@ class PPOTrainer:
         if "prefill_hit_rate" in eng.last_stats:     # paged engine
             gm["prefill_hit_rate"] = float(
                 eng.last_stats["prefill_hit_rate"])
+        self._add_reshard_metrics(gm)
         return exp, gm
 
+    def _add_reshard_metrics(self, gm: dict) -> None:
+        """Surface the MEASURED Hybrid-Engine phase-transition cost (wall
+        time + bytes read off the resharded arrays) in the experience
+        metrics."""
+        if self.engine is None:
+            return
+        rs = getattr(self.engine, "last_reshard_stats", {})
+        gm["reshard_bytes"] = float(rs.get("gathered_bytes", 0))
+        gm["reshard_s"] = float(rs.get("seconds", 0.0))
+
     def train_rlhf(self, exp: X.Experience, ptx_batch=None):
-        """Training phase (ZeRO layout)."""
-        self.actor, am = self._actor_step(self.actor, exp, ptx_batch)
-        self.critic, cm = self._critic_step(self.critic, exp)
+        """Training phase (the mesh's ZeRO/TP layout when one is
+        configured: the experience batch is committed to the data axis,
+        the updated TrainStates pin back to the training layout)."""
+        exp = self._shard_batch(exp)
+        ptx_batch = self._shard_batch(ptx_batch)
+        with self._mesh_ctx():
+            self.actor, am = self._actor_step(self.actor, exp, ptx_batch)
+            self.critic, cm = self._critic_step(self.critic, exp)
         if self.ema is not None:
             self.ema = EMA.update(self.ema, self.actor.params,
                                   self.ppo.ema_decay)

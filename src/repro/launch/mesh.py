@@ -20,14 +20,14 @@ ICI_BW = 50e9                # bytes/s per link
 HBM_BYTES = 16 * 2 ** 30     # per chip
 
 
-def _mesh(shape, axes):
+def _mesh(shape, axes, devices=None):
     # jax.sharding.AxisType only exists on newer jax; older versions
     # default every axis to Auto anyway, so omit the kwarg there
     at = getattr(jax.sharding, "AxisType", None)
     if at is not None:
-        return jax.make_mesh(shape, axes,
+        return jax.make_mesh(shape, axes, devices=devices,
                              axis_types=(at.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -40,3 +40,25 @@ def make_local_mesh(model: int = 1):
     """Mesh over whatever devices exist (CPU tests: 1 device)."""
     n = len(jax.devices())
     return _mesh((n // model, model), ("data", "model"))
+
+
+def make_mesh(dp: int, tp: int):
+    """Explicit DP×TP ``("data", "model")`` mesh over the FIRST ``dp*tp``
+    devices — unlike :func:`make_local_mesh` it does not require the
+    requested shape to cover every device, so a simulated 8-device host
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) can carry a
+    2×2 mesh for the CI multi-device matrix."""
+    n = dp * tp
+    devs = jax.devices()
+    if n > len(devs):
+        raise ValueError(f"mesh {dp}x{tp} needs {n} devices, "
+                         f"have {len(devs)}")
+    return _mesh((dp, tp), ("data", "model"), devices=devs[:n])
+
+
+def mesh_from_spec(spec: str):
+    """Parse a ``--mesh dp,tp`` flag (e.g. ``"2,4"``) into a mesh."""
+    parts = [int(x) for x in spec.split(",")]
+    if len(parts) != 2 or any(p < 1 for p in parts):
+        raise ValueError(f"--mesh expects 'dp,tp' (got {spec!r})")
+    return make_mesh(*parts)

@@ -228,6 +228,13 @@ def main():
                          "the slot's table and prefills only the "
                          "uncached suffix; harvested blocks park in an "
                          "LRU and are evicted before any preemption")
+    ap.add_argument("--mesh", default=None,
+                    help="dp,tp — serve under the Hybrid-Engine "
+                         "generation layout on an explicit device mesh: "
+                         "params are placed TP over `model`, the dense "
+                         "KV arena shards slots over `data` (simulate "
+                         "locally with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-k", type=int, default=40)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -251,6 +258,15 @@ def main():
         params = checkpoint.load(args.ckpt, params)
         print("loaded", args.ckpt)
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import mesh_from_spec
+        from repro.sharding import strategy as S
+        mesh = mesh_from_spec(args.mesh)
+        params = jax.device_put(params,
+                                S.param_shardings(cfg, mesh, "tp"))
+        print(f"mesh={dict(mesh.shape)} params=tp layout")
+
     tok = ByteTokenizer()
     engine = GenerationEngine(cfg, max_new_tokens=args.max_new,
                               temperature=args.temperature,
@@ -258,7 +274,8 @@ def main():
                               eos_id=args.eos_id, chunk=args.chunk,
                               kv_layout=args.kv_layout,
                               block_size=args.block_size,
-                              prefix_cache=args.prefix_cache == "on")
+                              prefix_cache=args.prefix_cache == "on",
+                              mesh=mesh)
     if args.chat:
         chat_loop(engine, params, tok, args)
         return

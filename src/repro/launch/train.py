@@ -1,12 +1,20 @@
 """Training launcher.
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
-        --reduced --steps 50 --batch 8 --seq 64 [--strategy zero3] \
-        [--lora 8] [--ckpt out/model.npz]
+        --reduced --steps 50 --batch 8 --seq 64 [--mesh 2,2] \
+        [--strategy zero3] [--zero 0|1] [--lora 8] [--ckpt out/model.npz]
 
 On this CPU container, ``--reduced`` trains the reduced variant on
 synthetic LM data end-to-end; the full configs are exercised via
 ``repro.launch.dryrun`` on the production mesh.
+
+``--mesh dp,tp`` jits the train step against an explicit DP×TP device
+mesh: the batch shards over ``data``, params follow ``--strategy``
+(``zero3`` default: TP over ``model`` + fp32 ``embed`` dims over
+``data``), and ``--zero 1`` shards the Adam moments over ``data``
+(ZeRO-1) even when params are replicated.  Run locally with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to simulate the
+mesh on CPU (see docs/scaling.md).
 """
 from __future__ import annotations
 
@@ -20,7 +28,7 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.core import lora as LoRA
 from repro.data import CopyTaskDataset, DataBlender, SortTaskDataset
-from repro.launch.mesh import make_local_mesh
+from repro.launch.mesh import make_local_mesh, mesh_from_spec
 from repro.models import transformer as T
 from repro.training import checkpoint, schedules
 from repro.training.steps import lm_train_step
@@ -39,15 +47,41 @@ def main():
     ap.add_argument("--lora", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--mesh", default=None,
+                    help="dp,tp — jit the train step against an explicit "
+                         "DP×TP mesh (e.g. 2,2)")
+    ap.add_argument("--strategy", default="zero3",
+                    choices=["ddp", "zero1", "zero3", "tp"],
+                    help="param sharding strategy on the mesh")
+    ap.add_argument("--zero", type=int, default=1, choices=[0, 1],
+                    help="ZeRO stage for the Adam moments on the mesh: "
+                         "1 shards them over the data axes")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    mesh = None
+    if args.mesh:
+        if args.lora:
+            ap.error("--mesh with --lora is not supported")
+        mesh = mesh_from_spec(args.mesh)
+        cfg = cfg.replace(batch_axes=("data",), tp_axis="model")
+        print(f"mesh={dict(mesh.shape)} strategy={args.strategy} "
+              f"zero={args.zero}")
     print(f"arch={cfg.name} params={cfg.n_params()/1e6:.1f}M")
 
     key = jax.random.PRNGKey(args.seed)
     params = T.init_params(cfg, key)
+
+    shard_batch = lambda b: b
+    sharded = None
+    if mesh is not None:
+        from repro.training.steps import make_sharded_lm_step
+        sharded = make_sharded_lm_step(cfg, mesh, args.strategy,
+                                       zero=args.zero, micro=args.micro)
+        shard_batch = sharded[2]
+
     adapters = None
     if args.lora:
         adapters = LoRA.init(params, args.lora, key)
@@ -56,7 +90,11 @@ def main():
               f"{sum(x.size for x in jax.tree.leaves(adapters))/1e6:.2f}M "
               f"adapter params")
     else:
-        state = TrainState.create(params)
+        # with a mesh the fresh state is COMMITTED to the training
+        # layout at creation — ZeRO'd fp32 moments never materialize
+        # replicated (the whole point of --zero on a memory-tight mesh)
+        state = TrainState.create(
+            params, shardings=sharded[1] if sharded else None)
 
     half = args.seq // 2
     ds = [CopyTaskDataset(10_000, half, args.seq - half,
@@ -82,10 +120,19 @@ def main():
         step = jax.jit(lambda s, b, lr: lm_train_step(
             cfg, s, b, lr, micro=args.micro))
 
+    mesh_ctx = None
+    if sharded is not None:
+        step = sharded[0]
+        mesh_ctx = mesh
+
     t0 = time.perf_counter()
     for i, batch in enumerate(bl.sft_batches(args.batch, args.steps)):
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        state, m = step(state, batch, lr_fn(i))
+        batch = shard_batch({k: jnp.asarray(v) for k, v in batch.items()})
+        if mesh_ctx is not None:
+            with mesh_ctx:
+                state, m = step(state, batch, lr_fn(i))
+        else:
+            state, m = step(state, batch, lr_fn(i))
         if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
             dt = time.perf_counter() - t0
             print(f"step {i:4d}  loss={float(m['loss']):.4f}  "

@@ -111,6 +111,7 @@ from typing import Any, Dict, List, Optional, Sequence, Set
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.models import transformer as T
 from repro.models.config import ATTN, ModelConfig
@@ -257,8 +258,16 @@ class GenerationEngine:
                  temperature: float = 1.0, top_k: int = 0,
                  top_p: float = 1.0, eos_id: Optional[int] = None,
                  chunk: int = 32, kv_layout: str = "dense",
-                 block_size: int = 16, prefix_cache: bool = False):
+                 block_size: int = 16, prefix_cache: bool = False,
+                 mesh=None):
         self.cfg = cfg
+        # Hybrid-Engine generation layout: with a (multi-device) mesh the
+        # engine consumes TP/replicated params and lays its KV cache out
+        # per-device — batch rows over the `data` axis, KV length over
+        # `model` where divisible (see sharding.strategy.cache_pspecs).
+        # The paged block pool stays replicated (block tables are
+        # host-side); None keeps every graph single-device.
+        self.mesh = mesh
         self.max_new_tokens = int(max_new_tokens)
         self.temperature = float(temperature)
         self.top_k = int(top_k)
@@ -316,14 +325,36 @@ class GenerationEngine:
                                        donate_argnums=(1, 2, 3, 4, 5, 6))
 
     # ================================================================ #
+    # mesh layout helpers (no-ops when mesh is None)
+    # ================================================================ #
+    def _constrain_batch_arr(self, x):
+        if self.mesh is None:
+            return x
+        from repro.sharding import strategy as S
+        ps = S.batch_pspec(self.mesh, int(x.shape[0]), x.ndim)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, ps))
+
+    def _constrain_cache(self, cache, batch: int):
+        if self.mesh is None:
+            return cache
+        from repro.sharding import strategy as S
+        pspecs = S.cache_pspecs(cache, self.mesh, batch)
+        return jax.tree_util.tree_map(
+            lambda x, p: jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, p)), cache, pspecs)
+
+    # ================================================================ #
     # fixed-batch path with early exit (PPO experience generation)
     # ================================================================ #
     def _prefill_fixed_impl(self, params, tokens, encoder_embeds):
         B, Lp = tokens.shape
-        cache = T.init_cache(self.cfg, B, Lp + self.max_new_tokens)
+        tokens = self._constrain_batch_arr(tokens)
+        cache = self._constrain_cache(
+            T.init_cache(self.cfg, B, Lp + self.max_new_tokens), B)
         logits, cache = prefill(self.cfg, params, tokens, cache,
                                 encoder_embeds=encoder_embeds)
-        return logits, cache
+        return logits, self._constrain_cache(cache, B)
 
     def _fixed_chunk(self, n: int):
         if n not in self._chunk_fns:
@@ -640,9 +671,20 @@ class _DenseBackend:
     """Fixed ``(slots, S)`` KV arena: a slot owns ``S`` rows for life, so
     admission needs nothing beyond a free slot and release is free."""
 
+    wants_seq_tokens = False           # release() ignores seq_tokens
+
     def __init__(self, core: "EngineCore"):
         self.core = core
         self.cache = T.init_cache(core.cfg, core.slots, core.S)
+        if core.engine.mesh is not None:
+            # per-device KV under the Hybrid-Engine generation layout:
+            # slot rows over `data`, KV length over `model` (divisible
+            # dims only — see cache_pspecs)
+            from repro.sharding import strategy as S
+            mesh = core.engine.mesh
+            pspecs = S.cache_pspecs(self.cache, mesh, core.slots)
+            self.cache = jax.device_put(self.cache, jax.tree.map(
+                lambda p: NamedSharding(mesh, p), pspecs))
 
     def check(self, uid: int, Lp: int, max_new: int) -> None:
         if Lp + max_new > self.core.S:
@@ -714,6 +756,9 @@ class _PagedBackend:
         self.tables = BlockTables(self.alloc, core.slots, self.nbmax)
         self.watermark = watermark
         self.prefix_cache = e.prefix_cache
+        # release() harvests the finished stream into the radix index
+        # only when the cache is on; the core skips building it otherwise
+        self.wants_seq_tokens = self.prefix_cache
         # admission reserve: ``watermark`` free blocks, or (default) one
         # chunk's worth of decode appends per *running* slot — a static
         # reserve sized by the slot cap would strangle small pools
@@ -1022,9 +1067,13 @@ class EngineCore:
         # harvest the finished stream into the prefix cache (the prompt's
         # blocks were indexed at admission; this adds the generated
         # region's full blocks — a cancelled stream is harvested too,
-        # its blocks hold exactly ``prompt + streamed`` rows)
-        seq = np.concatenate([np.asarray(a.req.tokens, np.int32),
-                              np.asarray(a.toks, np.int32)])
+        # its blocks hold exactly ``prompt + streamed`` rows).  Only the
+        # prefix-caching backend reads the concatenation; the common
+        # path skips building it.
+        seq = None
+        if self.backend.wants_seq_tokens:
+            seq = np.concatenate([np.asarray(a.req.tokens, np.int32),
+                                  np.asarray(a.toks, np.int32)])
         self.release_slot(b, requeue=False, seq_tokens=seq)
 
     def _process_cancels(self, events: List[StepEvent]) -> None:

@@ -70,6 +70,21 @@ def opt_rules_for(strategy: str, mesh: Mesh) -> dict:
     return {}
 
 
+def zero1_opt_rules(strategy: str, mesh: Mesh) -> dict:
+    """ZeRO-1 composed with an arbitrary *param* strategy: the optimizer
+    moments inherit the param layout PLUS their ``embed`` dimension
+    sharded over the data axes.  Unlike :func:`opt_rules_for` (the
+    historical zero1/zero3 mapping) this works for ``tp``/``ddp`` param
+    layouts too — the multi-device PPO step trains with TP params
+    replicated over data while the fp32 Adam moments are 1/dp-sized per
+    replica."""
+    dp = data_axes(mesh)
+    rules = dict(rules_for(strategy, mesh))
+    if dp:
+        rules.setdefault("embed", dp[0] if len(dp) == 1 else dp)
+    return rules
+
+
 def _mesh_size(mesh: Mesh, axes) -> int:
     return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
 
@@ -110,6 +125,63 @@ def pspecs_for_tree(specs, mesh: Mesh, strategy: str, *, opt=False):
 def param_shardings(cfg: ModelConfig, mesh: Mesh, strategy: str):
     return jax.tree_util.tree_map(lambda p: NamedSharding(mesh, p),
                                   param_pspecs(cfg, mesh, strategy))
+
+
+def train_state_pspecs(cfg: ModelConfig, mesh: Mesh, strategy: str, *,
+                       zero: int = 0, specs=None):
+    """PartitionSpecs for a full :class:`~repro.training.train_state
+    .TrainState` (params + Adam moments + step counters) under ``strategy``
+    params.  ``zero=1`` additionally shards the fp32 moments over the data
+    axes (ZeRO stage 1); ``zero=0`` keeps them in the param layout —
+    except for the ``zero1``/``zero3`` strategies, whose NAME already
+    promises sharded optimizer state, so they ignore ``zero=0`` (a
+    ``zero1`` layout with replicated moments would just be ``ddp``).
+    ``specs`` overrides the param-spec tree (e.g.
+    ``repro.models.reward.param_specs`` for the critic's value head)."""
+    from repro.training.optimizer import AdamState
+    from repro.training.train_state import TrainState
+    specs = T.param_specs(cfg) if specs is None else specs
+    if strategy in ("zero1", "zero3"):
+        zero = 1
+    prules = rules_for(strategy, mesh)
+    orules = zero1_opt_rules(strategy, mesh) if zero else prules
+
+    def resolve(rules):
+        return jax.tree_util.tree_map(
+            lambda s: spec_to_pspec(s, rules, mesh), specs,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    opt_ps = resolve(orules)
+    return TrainState(params=resolve(prules),
+                      opt=AdamState(m=opt_ps, v=opt_ps, step=P()),
+                      step=P())
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh, strategy: str, *,
+                          zero: int = 0, specs=None):
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p),
+        train_state_pspecs(cfg, mesh, strategy, zero=zero, specs=specs))
+
+
+def shardings_for_tree(specs, mesh: Mesh, strategy: str, *, opt=False):
+    """NamedShardings for an arbitrary ParamSpec tree (reward/critic
+    models with non-transformer heads)."""
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p),
+        pspecs_for_tree(specs, mesh, strategy, opt=opt))
+
+
+def shard_batch(tree, mesh: Mesh):
+    """Commit a batch pytree's leading dim to the data axes (replicated
+    when the batch doesn't divide them).  THE one copy of the placement
+    rule — the PPO trainer and the sharded LM step both call it, so the
+    divisibility/replication decision can't diverge between paths."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return tree
+    lead = batch_pspec(mesh, int(leaves[0].shape[0]), 1)[0]
+    return jax.device_put(tree, NamedSharding(mesh, P(lead)))
 
 
 def batch_pspec(mesh: Mesh, batch: int, ndim: int = 2) -> P:

@@ -100,6 +100,40 @@ def lm_train_step(cfg: ModelConfig, state: TrainState, batch, lr,
     return state, metrics
 
 
+def make_sharded_lm_step(cfg: ModelConfig, mesh, strategy: str, *,
+                         zero: int = 1, micro: int = 1,
+                         weight_decay: float = 0.0):
+    """Jit :func:`lm_train_step` against a DP×TP mesh.
+
+    Returns ``(step, state_shardings, shard_batch)``:
+
+    - ``step(state, batch, lr)`` — jitted with ``out_shardings`` pinning
+      the updated state to the training layout (``strategy`` params,
+      ZeRO-``zero`` Adam moments) and metrics replicated, so the step
+      compiles once across iterations;
+    - ``state_shardings`` — pass to ``TrainState.create(params,
+      shardings=...)`` (or ``jax.device_put``) to commit the state;
+    - ``shard_batch(batch)`` — commits a batch pytree's leading dim to
+      the data axes (replicates when indivisible).
+
+    Call ``step`` inside ``with mesh:`` when ``cfg.batch_axes`` is set —
+    the activation constraints trace against the ambient mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.sharding import strategy as S
+
+    st_sh = S.train_state_shardings(cfg, mesh, strategy, zero=zero)
+    step = jax.jit(
+        lambda s, b, lr: lm_train_step(cfg, s, b, lr,
+                                       weight_decay=weight_decay,
+                                       micro=micro),
+        out_shardings=(st_sh, NamedSharding(mesh, P())))
+
+    def shard_batch(batch):
+        return S.shard_batch(batch, mesh)
+
+    return step, st_sh, shard_batch
+
+
 def reward_loss_fn(cfg: ModelConfig, params, batch):
     loss, acc = R.pairwise_loss(cfg, params, batch["chosen"],
                                 batch["rejected"], batch["chosen_mask"],

@@ -15,9 +15,22 @@ class TrainState(NamedTuple):
     step: jnp.ndarray
 
     @classmethod
-    def create(cls, params) -> "TrainState":
-        return cls(params=params, opt=opt.init(params),
-                   step=jnp.zeros((), jnp.int32))
+    def create(cls, params, shardings=None) -> "TrainState":
+        """``shardings`` (a TrainState-shaped tree of NamedShardings,
+        e.g. from :func:`repro.sharding.strategy.train_state_shardings`)
+        commits the fresh state to a mesh layout: params are placed
+        first and the fp32 Adam moments are *born* sharded (zeros jitted
+        with ``out_shardings``) — ZeRO'd optimizer state never
+        materializes unsharded on any device."""
+        if shardings is None:
+            return cls(params=params, opt=opt.init(params),
+                       step=jnp.zeros((), jnp.int32))
+        params = jax.device_put(params, shardings.params)
+        opt_state = jax.jit(opt.init,
+                            out_shardings=shardings.opt)(params)
+        return cls(params=params, opt=opt_state,
+                   step=jax.device_put(jnp.zeros((), jnp.int32),
+                                       shardings.step))
 
     def apply_gradients(self, grads, *, lr, weight_decay=0.0,
                         grad_clip=1.0, trainable_mask=None) -> "TrainState":

@@ -1,0 +1,77 @@
+"""Mesh construction: the version-gated AxisType path and explicit
+DP×TP meshes.
+
+``launch.mesh._mesh`` branches on ``jax.sharding.AxisType`` (newer jax
+requires every-axis Auto to keep GSPMD auto-sharding; older jax has no
+such kwarg).  These tests pin BOTH branches with fakes so the next jax
+bump cannot silently break mesh construction on either side."""
+import jax
+import numpy as np
+import pytest
+
+from repro.launch import mesh as M
+
+
+def test_axistype_absent_branch(monkeypatch):
+    """Old-jax branch: no AxisType attribute -> make_mesh must be called
+    WITHOUT axis_types (the kwarg does not exist there)."""
+    seen = {}
+    real = jax.make_mesh
+
+    def fake(shape, axes, *, devices=None, **kw):
+        seen.update(kw)
+        return real(shape, axes, devices=devices)
+
+    monkeypatch.setattr(jax, "make_mesh", fake)
+    monkeypatch.delattr(jax.sharding, "AxisType", raising=False)
+    m = M.make_mesh(1, 1)
+    assert "axis_types" not in seen
+    assert dict(m.shape) == {"data": 1, "model": 1}
+    assert m.axis_names == ("data", "model")
+
+
+def test_axistype_present_branch(monkeypatch):
+    """New-jax branch: AxisType exists -> every axis must be passed as
+    Auto (explicit-sharding axes would break the GSPMD constraints this
+    repo relies on)."""
+    real = jax.make_mesh
+    seen = {}
+
+    class FakeAxisType:
+        Auto = object()
+
+    def fake(shape, axes, *, devices=None, axis_types=None):
+        seen["axis_types"] = axis_types
+        return real(shape, axes, devices=devices)
+
+    monkeypatch.setattr(jax.sharding, "AxisType", FakeAxisType,
+                        raising=False)
+    monkeypatch.setattr(jax, "make_mesh", fake)
+    m = M.make_mesh(1, 1)
+    assert seen["axis_types"] == (FakeAxisType.Auto, FakeAxisType.Auto)
+    assert dict(m.shape) == {"data": 1, "model": 1}
+
+
+def test_make_mesh_slices_devices():
+    """make_mesh(dp, tp) runs on the FIRST dp*tp devices, so a partial
+    mesh works on a host with more simulated devices than the mesh."""
+    n = len(jax.devices())
+    m = M.make_mesh(n, 1)
+    assert dict(m.shape) == {"data": n, "model": 1}
+    with pytest.raises(ValueError, match="needs"):
+        M.make_mesh(n + 1, 1)
+
+
+def test_mesh_from_spec_parsing():
+    n = len(jax.devices())
+    m = M.mesh_from_spec(f"{n},1")
+    assert dict(m.shape) == {"data": n, "model": 1}
+    for bad in ("2", "1,2,3", "0,1", "-1,1"):
+        with pytest.raises(ValueError):
+            M.mesh_from_spec(bad)
+
+
+def test_local_and_production_mesh_shapes():
+    m = M.make_local_mesh()
+    assert m.axis_names == ("data", "model")
+    assert int(np.prod(list(m.shape.values()))) == len(jax.devices())

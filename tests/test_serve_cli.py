@@ -56,6 +56,19 @@ def test_prefix_cache_flag(monkeypatch, capsys):
     assert "evictions=" in out
 
 
+def test_mesh_flag(monkeypatch, capsys):
+    """--mesh 1,1 runs the full launcher path through the TP param
+    placement and the mesh-aware engine (a 1-device mesh in tier-1; the
+    multi-device CI job covers real shapes)."""
+    out = _run(monkeypatch, capsys, "--mesh", "1,1")
+    assert "mesh={'data': 1, 'model': 1}" in out and "tok/s" in out
+
+
+def test_mesh_flag_rejects_bad_spec(monkeypatch, capsys):
+    with pytest.raises(ValueError):
+        _run(monkeypatch, capsys, "--mesh", "1,2,3")
+
+
 def test_prefix_cache_requires_paged(monkeypatch, capsys):
     with pytest.raises(SystemExit):
         _run(monkeypatch, capsys, "--kv-layout", "dense",

@@ -103,3 +103,99 @@ def test_batch_pspec():
     assert S.batch_pspec(MULTI, 256, 3) == P(("pod", "data"), None, None)
     # batch divisible by data but not pod*data
     assert S.batch_pspec(MULTI, 16, 2) == P("data", None)
+
+
+# ------------------------------------------------------------------- #
+# edge rules: fused-QKV / GQA shapes, ZeRO-1 composition, cache pspecs
+# ------------------------------------------------------------------- #
+def test_fused_qkv_indivisible_head_dim_replicates():
+    """A fused QKV projection (H*hd + 2*KV*hd columns) whose fused dim
+    does not divide the model axis must degrade to replication, not
+    crash or mis-shard."""
+    rules = S.rules_for("tp", SINGLE)
+    D, H, KV, hd = 512, 7, 2, 24                  # (7 + 4) * 24 = 264
+    fused = ParamSpec((D, (H + 2 * KV) * hd), ("embed", "heads"))
+    assert (H + 2 * KV) * hd % 16 != 0
+    assert S.spec_to_pspec(fused, rules, SINGLE) == P(None, None)
+    # divisible fused dim shards: (14 + 2) * 64 = 1024 = 16 * 64
+    fused_ok = ParamSpec((D, 16 * 64), ("embed", "heads"))
+    assert S.spec_to_pspec(fused_ok, rules, SINGLE) == P(None, "model")
+
+
+def test_gqa_kv_heads_smaller_than_model_axis():
+    """GQA KV projections whose kv_heads*hd dim is smaller than the
+    16-way model axis stay replicated while the Q projection shards."""
+    rules = S.rules_for("tp", SINGLE)
+    wk = ParamSpec((512, 2 * 4), ("embed", "kv_heads"))    # 8 rows < 16
+    assert S.spec_to_pspec(wk, rules, SINGLE) == P(None, None)
+    wq = ParamSpec((512, 16 * 4), ("embed", "heads"))
+    assert S.spec_to_pspec(wq, rules, SINGLE) == P(None, "model")
+
+
+def test_zero1_opt_rules_compose_with_tp():
+    """ZeRO-1 over an arbitrary param strategy: moments inherit the param
+    layout plus `embed` over the data axes; params stay put."""
+    prules = S.rules_for("tp", SINGLE)
+    orules = S.zero1_opt_rules("tp", SINGLE)
+    spec = ParamSpec((1024, 512), ("embed", "mlp"))
+    assert S.spec_to_pspec(spec, prules, SINGLE) == P(None, "model")
+    assert S.spec_to_pspec(spec, orules, SINGLE) == P("data", "model")
+    # ddp params + zero1 moments: moments shard over data only
+    assert S.spec_to_pspec(spec, S.zero1_opt_rules("ddp", SINGLE),
+                           SINGLE) == P("data", None)
+    # zero3 already shards embed over data; zero1 composition is a no-op
+    assert (S.zero1_opt_rules("zero3", SINGLE)
+            == S.rules_for("zero3", SINGLE))
+    # multi-pod: embed shards over BOTH data axes
+    assert S.spec_to_pspec(spec, S.zero1_opt_rules("ddp", MULTI),
+                           MULTI) == P(("pod", "data"), None)
+
+
+def test_train_state_pspecs_structure():
+    """The TrainState pspec tree mirrors (params, AdamState(m, v, step),
+    step) with zero=1 moments data-sharded and scalars replicated."""
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="t", arch_type="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                      compute_dtype="float32", remat=False)
+    ts = S.train_state_pspecs(cfg, SINGLE, "tp", zero=1)
+    assert ts.step == P()
+    assert ts.opt.step == P()
+    # params and moments have the same tree structure
+    pt = jax.tree_util.tree_structure(ts.params)
+    assert jax.tree_util.tree_structure(ts.opt.m) == pt
+    assert jax.tree_util.tree_structure(ts.opt.v) == pt
+    # at least one moment leaf gained a data axis its param lacks
+    flat_p = jax.tree_util.tree_leaves(ts.params)
+    flat_m = jax.tree_util.tree_leaves(ts.opt.m)
+
+    def uses_data(ps):
+        return any("data" in ((a,) if isinstance(a, str) else tuple(a))
+                   for a in ps if a is not None)
+
+    assert any(uses_data(m) and not uses_data(p)
+               for p, m in zip(flat_p, flat_m))
+
+
+def test_cache_pspecs_batch_axis():
+    """KV cache layout: batch shards over data when divisible (else
+    replicates), the KV length axis shards over model when divisible."""
+    import jax as _jax
+    from repro.models.config import ModelConfig
+    from repro.models import transformer as T
+
+    cfg = ModelConfig(name="t", arch_type="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                      compute_dtype="float32", remat=False)
+    # batch 32 % data(16) == 0, S=64 % model(16) == 0 -> both shard
+    ps = S.cache_pspecs(T.cache_struct(cfg, 32, 64), SINGLE, 32)
+    for leaf in _jax.tree_util.tree_leaves(
+            ps, is_leaf=lambda x: isinstance(x, P)):
+        assert leaf[1] == "data"
+        assert leaf[2] == "model"
+    # indivisible batch replicates rows; odd S replicates the length
+    ps = S.cache_pspecs(T.cache_struct(cfg, 3, 65), SINGLE, 3)
+    for leaf in _jax.tree_util.tree_leaves(
+            ps, is_leaf=lambda x: isinstance(x, P)):
+        assert leaf[1] is None
+        assert leaf[2] is None

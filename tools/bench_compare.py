@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Advisory benchmark comparison for the CI benchmarks job (stdlib only).
+
+    python tools/bench_compare.py RESULTS.json [BASELINE.json]
+
+Diffs a benchmark JSON (written by
+``python -m benchmarks.effective_throughput --smoke --json RESULTS.json``)
+against a committed baseline (default ``benchmarks/baseline.json``) and
+prints a per-metric delta table.  NON-BLOCKING by design: it always
+exits 0 — the signal is the printed trend, seeding the BENCH trajectory
+without making CPU-runner noise a merge gate.  Metrics whose name ends
+in ``_ratio``/``_rate``/``_reduction`` are compared as absolute deltas;
+everything else as relative percentages.  Regressions beyond the
+advisory thresholds are flagged with ``!`` so they stand out in the log.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+REL_THRESHOLD = 0.20        # 20% relative drop flags a rate metric
+ABS_THRESHOLD = 0.10        # 0.10 absolute drop flags a ratio metric
+ABS_SUFFIXES = ("_ratio", "_rate", "_reduction", "_utilization")
+
+
+def compare(results: dict, baseline: dict) -> list:
+    rows = []
+    for name in sorted(set(results) | set(baseline)):
+        new = results.get(name, {}).get("value")
+        old = baseline.get(name, {}).get("value")
+        if new is None:
+            rows.append((name, old, new, "missing in results", True))
+            continue
+        if old is None:
+            rows.append((name, old, new, "new metric (no baseline)",
+                         False))
+            continue
+        if name.endswith(ABS_SUFFIXES):
+            delta = new - old
+            note = f"{delta:+.3f} abs"
+            worse = delta < -ABS_THRESHOLD
+        else:
+            rel = (new - old) / old if old else 0.0
+            note = f"{rel:+.1%}"
+            worse = rel < -REL_THRESHOLD
+        rows.append((name, old, new, note, worse))
+    return rows
+
+
+def main(argv) -> int:
+    if not argv:
+        print(__doc__, file=sys.stderr)
+        return 0
+    results_path = pathlib.Path(argv[0])
+    baseline_path = pathlib.Path(
+        argv[1] if len(argv) > 1 else
+        pathlib.Path(__file__).resolve().parent.parent
+        / "benchmarks" / "baseline.json")
+    results = json.loads(results_path.read_text())
+    if not baseline_path.exists():
+        print(f"no baseline at {baseline_path} — nothing to compare "
+              f"(commit one with --json to seed the trajectory)")
+        return 0
+    baseline = json.loads(baseline_path.read_text())
+    rows = compare(results, baseline)
+    w = max(len(r[0]) for r in rows) if rows else 4
+    print(f"{'metric'.ljust(w)}  {'baseline':>12}  {'current':>12}  delta")
+    flagged = 0
+    for name, old, new, note, worse in rows:
+        mark = "!" if worse else " "
+        flagged += worse
+        fo = "-" if old is None else f"{old:.4g}"
+        fn = "-" if new is None else f"{new:.4g}"
+        print(f"{name.ljust(w)}  {fo:>12}  {fn:>12}  {note} {mark}")
+    print(f"\n{flagged} metric(s) regressed past the advisory threshold "
+          f"(non-blocking; thresholds: {REL_THRESHOLD:.0%} rel / "
+          f"{ABS_THRESHOLD} abs)")
+    return 0                 # advisory: NEVER fails the build
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
