@@ -61,13 +61,34 @@ class RLHFEngine:
 
 
 class RLHFPipeline:
+    """3-stage driver with optional fault tolerance.
+
+    Pass ``checkpointer`` (a
+    :class:`repro.training.checkpoint.CheckpointManager`) to make the
+    run durable: stage boundaries commit the stage-1/2 outputs, and
+    every ``save_every`` PPO iterations the FULL stage-3 state — actor
+    and critic TrainStates including Adam moments, the EMA shadow, the
+    frozen ref/reward params, the PRNG carry, the data-blender cursor,
+    step counters, and the metrics log — is snapshotted device-to-host
+    and written in the background.  ``run`` / ``run_ppo`` then resume
+    from the latest valid checkpoint, continuing bit-identically to an
+    uninterrupted run (tests/test_checkpoint_resume.py is the proof).
+    """
+
     def __init__(self, engine: RLHFEngine, blender: DataBlender,
-                 stages: StageConfig, ppo: PPOConfig):
+                 stages: StageConfig, ppo: PPOConfig,
+                 checkpointer=None, save_every: int = 1):
         self.e = engine
         self.blender = blender
         self.stages = stages
         self.ppo = ppo
+        self.ckpt = checkpointer
+        self.save_every = save_every
+        self.iter_hook = None      # called as iter_hook(i) at the top of
+        #                            each PPO iteration (telemetry; the
+        #                            crash-injection tests die here)
         self.log = {"stage1": [], "stage2": [], "stage3": []}
+        self.rm_acc = []
         self.timings = {}          # seconds per stage
         self.gen_tok_s = 0.0       # mean stage-3 generation throughput
 
@@ -87,6 +108,11 @@ class RLHFPipeline:
         self.timings["stage1"] = time.perf_counter() - t0
         self.e.actor_params = state.params
         self.e.ref_params = jax.tree.map(lambda x: x, state.params)
+        if self.ckpt is not None:
+            self.ckpt.save(self.SFT_STEP,
+                           {"actor": self.e.actor_params,
+                            "ref": self.e.ref_params},
+                           self._meta("sft_done"))
         return self.log["stage1"]
 
     # ----------------------- Step 2: Reward ------------------------ #
@@ -107,12 +133,28 @@ class RLHFPipeline:
         self.timings["stage2"] = time.perf_counter() - t0
         self.e.reward_params = state.params
         self.e.critic_params = jax.tree.map(lambda x: x, state.params)
+        self.rm_acc = accs
+        if self.ckpt is not None:
+            self.ckpt.save(self.RM_STEP,
+                           {"actor": self.e.actor_params,
+                            "ref": self.e.ref_params,
+                            "critic": self.e.critic_params,
+                            "reward": self.e.reward_params},
+                           self._meta("rm_done"))
         return accs
 
     # ------------------------ Step 3: PPO -------------------------- #
     def run_ppo(self, key=None):
         st = self.stages
         key = key if key is not None else jax.random.PRNGKey(st.seed + 3)
+        start, restored = 0, None
+        if self.ckpt is not None:
+            latest = self.ckpt.latest_step()
+            if (latest is not None and self.ckpt.restore_metadata(
+                    latest).get("stage") == "ppo"):
+                restored = self._restore_ppo(latest, key)
+                key = restored["rng"]
+                start = restored["ppo_iter"]
         trainer = PPOTrainer(
             actor_cfg=self.e.actor_cfg, critic_cfg=self.e.critic_cfg,
             actor_params=self.e.actor_params,
@@ -120,12 +162,18 @@ class RLHFPipeline:
             ref_params=self.e.ref_params,
             reward_params=self.e.reward_params,
             ppo=self.ppo, engine=self.e.hybrid)
-        ptx_iter = (self.blender.pretrain_batches(st.ppo_batch, st.ppo_steps)
+        if restored is not None:
+            trainer.load_state_tree(restored["trainer"])
+        ptx_iter = (self.blender.pretrain_batches(st.ppo_batch,
+                                                  st.ppo_steps, skip=start)
                     if self.ppo.ptx_coef > 0 else None)
-        scores = []
+        scores = [m["reward_score"] for m in self.log["stage3"]]
         t0 = time.perf_counter()
+        elapsed = self.timings.get("stage3", 0.0) if restored else 0.0
         for i, batch in enumerate(self.blender.prompt_batches(
-                st.ppo_batch, st.ppo_steps)):
+                st.ppo_batch, st.ppo_steps, skip=start), start=start):
+            if self.iter_hook is not None:
+                self.iter_hook(i)
             key, k = jax.random.split(key)
             exp, gm = trainer.generate_experience(
                 jnp.asarray(batch["prompts"]), k)
@@ -135,7 +183,13 @@ class RLHFPipeline:
             tm = trainer.train_rlhf(exp, ptx)
             scores.append(gm["reward_score"])
             self.log["stage3"].append({**gm, **tm})
-        self.timings["stage3"] = time.perf_counter() - t0
+            if (self.ckpt is not None and self.save_every
+                    and ((i + 1) % self.save_every == 0
+                         or i == st.ppo_steps - 1)):
+                self.timings["stage3"] = (elapsed
+                                          + time.perf_counter() - t0)
+                self._save_ppo(trainer, key, i + 1)
+        self.timings["stage3"] = elapsed + time.perf_counter() - t0
         # serving-grade generation telemetry (engine early-exit decode);
         # kept out of ``timings`` which holds seconds only
         if self.log["stage3"]:
@@ -143,12 +197,108 @@ class RLHFPipeline:
                 [m["gen_tok_s"] for m in self.log["stage3"]]))
         self.e.actor_params = trainer.actor.params
         self.trainer = trainer
+        if self.ckpt is not None:
+            self.ckpt.wait_for_save()     # durable before we return
         return scores
+
+    # -------------------- checkpoint/resume seam ------------------- #
+    # monotonic checkpoint step ids: stage boundaries, then one per
+    # completed PPO iteration (k completed -> RM_STEP + k)
+    SFT_STEP, RM_STEP = 1, 2
+
+    def _meta(self, stage: str) -> dict:
+        return {"stage": stage, "log": self.log, "rm_acc": self.rm_acc,
+                "timings": self.timings}
+
+    def _save_ppo(self, trainer, key, done: int) -> None:
+        """Commit the FULL stage-3 state after ``done`` completed
+        iterations: trainer states (moments + EMA), frozen ref/reward
+        params, the PRNG carry that iteration ``done`` will split, and
+        (in metadata) the data cursor + metrics log."""
+        tree = {"trainer": trainer.state_tree(),
+                "ref": trainer.ref_params,
+                "reward": trainer.reward_params,
+                "rng": np.asarray(key)}
+        self.ckpt.save(self.RM_STEP + done, tree,
+                       dict(self._meta("ppo"), ppo_iter=done))
+
+    def _restore_ppo(self, step: int, key) -> dict:
+        """Rebuild stage-3 state from checkpoint ``step``.  The restore
+        target (`like`) is pure structure — ``jax.eval_shape`` trees, no
+        allocation; sharding commitment happens later in
+        :meth:`PPOTrainer.load_state_tree` against the *current* mesh,
+        which is what makes cross-topology resume work."""
+        from repro.core import ema as EMA
+        like = {
+            "trainer": {
+                "actor": jax.eval_shape(TrainState.create,
+                                        self.e.actor_params),
+                "critic": jax.eval_shape(TrainState.create,
+                                         self.e.critic_params),
+                "ema": (jax.eval_shape(EMA.init, self.e.actor_params)
+                        if self.ppo.use_ema else None),
+            },
+            "ref": jax.eval_shape(lambda t: t, self.e.actor_params),
+            "reward": jax.eval_shape(lambda t: t, self.e.critic_params),
+            "rng": np.asarray(key),
+        }
+        tree, meta = self.ckpt.restore(like, step=step)
+        self.e.ref_params = tree["ref"]
+        self.e.reward_params = tree["reward"]
+        self.e.actor_params = tree["trainer"]["actor"].params
+        self.e.critic_params = tree["trainer"]["critic"].params
+        self.log = meta["log"]
+        self.rm_acc = meta["rm_acc"]
+        self.timings = meta["timings"]
+        return {"trainer": tree["trainer"],
+                "rng": jnp.asarray(tree["rng"]),
+                "ppo_iter": int(meta["ppo_iter"])}
+
+    def _restore_boundary(self, step: int, meta: dict) -> None:
+        """Adopt a stage-boundary checkpoint (skip re-running the
+        completed stages)."""
+        like = {"actor": jax.eval_shape(lambda t: t, self.e.actor_params),
+                "ref": jax.eval_shape(lambda t: t, self.e.actor_params)}
+        if meta["stage"] == "rm_done":
+            like["critic"] = jax.eval_shape(lambda t: t,
+                                            self.e.critic_params)
+            like["reward"] = jax.eval_shape(lambda t: t,
+                                            self.e.critic_params)
+        tree, meta = self.ckpt.restore(like, step=step)
+        self.e.actor_params = tree["actor"]
+        self.e.ref_params = tree["ref"]
+        if "critic" in tree:
+            self.e.critic_params = tree["critic"]
+            self.e.reward_params = tree["reward"]
+        self.log = meta["log"]
+        self.rm_acc = meta["rm_acc"]
+        self.timings = meta["timings"]
+
+    def maybe_restore(self):
+        """(stage, step) of the latest valid checkpoint, or None."""
+        if self.ckpt is None:
+            return None
+        step = self.ckpt.latest_step()
+        if step is None:
+            return None
+        return self.ckpt.restore_metadata(step).get("stage"), step
 
     # --------------------------- driver ---------------------------- #
     def run(self, key=None):
-        sft = self.run_sft()
-        accs = self.run_reward()
+        """End-to-end 3-stage run; with a checkpointer, an elastic one:
+        a rerun after a crash fast-forwards past completed stages and
+        resumes stage 3 mid-stream from the latest valid checkpoint."""
+        resume = self.maybe_restore()
+        stage = resume[0] if resume else None
+        if stage == "ppo":
+            pass                  # run_ppo restores everything itself
+        elif stage in ("sft_done", "rm_done"):
+            self._restore_boundary(resume[1],
+                                   {"stage": stage})
+        if stage is None:
+            self.run_sft()
+        if stage in (None, "sft_done"):
+            self.run_reward()
         scores = self.run_ppo(key)
-        return {"sft_loss": sft, "rm_acc": accs, "ppo_scores": scores,
-                "timings": self.timings}
+        return {"sft_loss": self.log["stage1"], "rm_acc": self.rm_acc,
+                "ppo_scores": scores, "timings": self.timings}

@@ -365,6 +365,38 @@ class PPOTrainer:
         gm["reshard_bytes"] = float(rs.get("gathered_bytes", 0))
         gm["reshard_s"] = float(rs.get("seconds", 0.0))
 
+    # ---------------------- checkpoint seam ----------------------- #
+    def state_tree(self):
+        """The trainer's full durable state as ONE pytree: actor and
+        critic TrainStates (params + fp32 Adam moments + step counters)
+        and the EMA shadow.  What the fault-tolerant checkpointer saves
+        and what :meth:`load_state_tree` restores."""
+        return {"actor": self.actor, "critic": self.critic,
+                "ema": self.ema}
+
+    def state_shardings(self):
+        """NamedShardings matching :meth:`state_tree` in the training
+        layout (``None`` single-device) — a restore commits straight to
+        this mesh's layout regardless of the topology the checkpoint
+        was saved under."""
+        if not self._multi:
+            return None
+        a_sh = self.engine.train_state_shardings(self.actor_cfg)
+        c_sh = self.engine.train_state_shardings(
+            self.critic_cfg, specs=R.param_specs(self.critic_cfg))
+        return {"actor": a_sh, "critic": c_sh,
+                "ema": a_sh.params if self.ema is not None else None}
+
+    def load_state_tree(self, tree):
+        """Adopt a restored state tree (host arrays or committed
+        jax arrays), placing it into the mesh's training layout."""
+        sh = self.state_shardings()
+        if sh is not None:
+            tree = jax.device_put(tree, sh)
+        self.actor = tree["actor"]
+        self.critic = tree["critic"]
+        self.ema = tree["ema"]
+
     def train_rlhf(self, exp: X.Experience, ptx_batch=None):
         """Training phase (the mesh's ZeRO/TP layout when one is
         configured: the experience batch is committed to the data axis,

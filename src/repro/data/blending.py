@@ -55,6 +55,16 @@ class DataBlender:
         idx = int(pool[rng.integers(len(pool))])
         return self.datasets[ds_i], idx, ds_i
 
+    def _skip(self, rng, stage: int, batch_size: int, skip: int):
+        """Fast-forward a batch stream's RNG past ``skip`` batches.
+
+        Each emitted batch consumes exactly ``batch_size`` draws, so
+        replaying the draws (without materializing examples) leaves the
+        generator bit-identical to one that actually yielded them — the
+        data-cursor half of elastic resume (docs/checkpointing.md)."""
+        for _ in range(skip * batch_size):
+            self._draw(rng, stage)
+
     @staticmethod
     def _lm_example(ds: PromptDataset, idx: int):
         prompt = ds.get_prompt(idx)
@@ -65,9 +75,11 @@ class DataBlender:
         mask[len(prompt) - 1:-1] = 1.0       # predict response tokens only
         return toks, labels, mask
 
-    def sft_batches(self, batch_size: int, n_batches: int, stage: int = 0):
+    def sft_batches(self, batch_size: int, n_batches: int, stage: int = 0,
+                    skip: int = 0):
         rng = np.random.default_rng(self.seed + 100)
-        for _ in range(n_batches):
+        self._skip(rng, stage, batch_size, skip)
+        for _ in range(n_batches - skip):
             toks, labs, masks = [], [], []
             for _ in range(batch_size):
                 ds, idx, _ = self._draw(rng, stage)
@@ -77,9 +89,10 @@ class DataBlender:
                    "mask": np.stack(masks)}
 
     def reward_batches(self, batch_size: int, n_batches: int,
-                       stage: int = 1):
+                       stage: int = 1, skip: int = 0):
         rng = np.random.default_rng(self.seed + 200)
-        for _ in range(n_batches):
+        self._skip(rng, stage, batch_size, skip)
+        for _ in range(n_batches - skip):
             ch, rj = [], []
             for _ in range(batch_size):
                 ds, idx, _ = self._draw(rng, stage)
@@ -92,9 +105,10 @@ class DataBlender:
                    "chosen_mask": ones, "rejected_mask": ones.copy()}
 
     def prompt_batches(self, batch_size: int, n_batches: int,
-                       stage: int = 2):
+                       stage: int = 2, skip: int = 0):
         rng = np.random.default_rng(self.seed + 300)
-        for _ in range(n_batches):
+        self._skip(rng, stage, batch_size, skip)
+        for _ in range(n_batches - skip):
             ps, oracle = [], []
             for _ in range(batch_size):
                 ds, idx, ds_i = self._draw(rng, stage)
@@ -103,10 +117,12 @@ class DataBlender:
             yield {"prompts": np.stack(ps),
                    "dataset_idx": np.asarray(oracle, np.int32)}
 
-    def pretrain_batches(self, batch_size: int, n_batches: int):
+    def pretrain_batches(self, batch_size: int, n_batches: int,
+                         skip: int = 0):
         """Unsupervised batches for mixture (ptx) training."""
         rng = np.random.default_rng(self.seed + 400)
-        for _ in range(n_batches):
+        self._skip(rng, 0, batch_size, skip)
+        for _ in range(n_batches - skip):
             toks = []
             for _ in range(batch_size):
                 ds, idx, _ = self._draw(rng, 0)

@@ -2,7 +2,14 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
         --reduced --steps 50 --batch 8 --seq 64 [--mesh 2,2] \
-        [--strategy zero3] [--zero 0|1] [--lora 8] [--ckpt out/model.npz]
+        [--strategy zero3] [--zero 0|1] [--lora 8] [--ckpt out/model.npz] \
+        [--ckpt-dir out/ckpt --save-every 10 [--resume]]
+
+``--ckpt-dir`` + ``--save-every`` make the run fault tolerant: every N
+steps the full TrainState (params + Adam moments + step) and the data
+cursor are committed through the async sharded checkpointer;
+``--resume`` continues bit-identically from the latest valid
+checkpoint, including across mesh topologies (docs/checkpointing.md).
 
 On this CPU container, ``--reduced`` trains the reduced variant on
 synthetic LM data end-to-end; the full configs are exercised via
@@ -46,7 +53,17 @@ def main():
     ap.add_argument("--micro", type=int, default=1)
     ap.add_argument("--lora", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="final .npz params export (legacy single-file)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="directory for fault-tolerant async sharded "
+                         "checkpoints (see docs/checkpointing.md)")
+    ap.add_argument("--save-every", type=int, default=0,
+                    help="checkpoint the full TrainState + data cursor "
+                         "every N steps into --ckpt-dir")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest valid checkpoint in "
+                         "--ckpt-dir (bit-identical continuation)")
     ap.add_argument("--mesh", default=None,
                     help="dp,tp — jit the train step against an explicit "
                          "DP×TP mesh (e.g. 2,2)")
@@ -125,18 +142,37 @@ def main():
         step = sharded[0]
         mesh_ctx = mesh
 
+    mgr = None
+    start = 0
+    if args.ckpt_dir:
+        mgr = checkpoint.CheckpointManager(args.ckpt_dir)
+        if args.resume and mgr.latest_step() is not None:
+            like = jax.eval_shape(lambda t: t, state)
+            state, meta = mgr.restore(
+                like, shardings=sharded[1] if sharded else None)
+            start = int(meta["step"]) + 1
+            print(f"resumed from step {meta['step']} "
+                  f"(checkpoint {mgr.latest_step()})")
+
     t0 = time.perf_counter()
-    for i, batch in enumerate(bl.sft_batches(args.batch, args.steps)):
+    for i, batch in enumerate(bl.sft_batches(args.batch, args.steps,
+                                             skip=start), start=start):
         batch = shard_batch({k: jnp.asarray(v) for k, v in batch.items()})
         if mesh_ctx is not None:
             with mesh_ctx:
                 state, m = step(state, batch, lr_fn(i))
         else:
             state, m = step(state, batch, lr_fn(i))
+        if mgr is not None and args.save_every and (
+                (i + 1) % args.save_every == 0 or i == args.steps - 1):
+            mgr.save(i + 1, state,
+                     metadata={"arch": cfg.name, "step": i})
         if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
             dt = time.perf_counter() - t0
             print(f"step {i:4d}  loss={float(m['loss']):.4f}  "
                   f"gnorm={float(m['grad_norm']):.3f}  {dt:6.1f}s")
+    if mgr is not None:
+        mgr.wait_for_save()           # durable before exit
     if args.ckpt:
         tree = state.params if not args.lora else LoRA.fold(params,
                                                             state.params)

@@ -1,28 +1,115 @@
-"""Checkpointing: pytree <-> .npz with path-flattened keys + metadata.
+"""Checkpointing: async sharded TrainState snapshots + legacy .npz trees.
 
-Simple, dependency-free, good enough for single-host CPU runs and the
-examples; on a real cluster this module is the seam where an async
-multi-host checkpointer would plug in.
+Two layers live here:
+
+- The legacy single-file API (:func:`save` / :func:`load` /
+  :func:`load_metadata`): pytree <-> ``.npz`` with path-flattened keys.
+  Dependency-free, good for exporting final params (``--ckpt`` in the
+  launchers, the serve CLI's ``--ckpt`` load path).
+
+- :class:`CheckpointManager`: the fault-tolerance subsystem.  A save is
+  a synchronous device-to-host snapshot of every addressable shard
+  (keyed by the sharded layout the arrays already live in — the PR 5
+  ``train_state_pspecs`` for a TrainState) followed by a background
+  write of per-shard ``.npy`` files plus a JSON manifest, committed
+  atomically: everything lands in a dot-prefixed temp directory, every
+  file and the directory entry are fsynced, and a single ``os.replace``
+  publishes the checkpoint.  A crash at ANY point mid-write leaves at
+  worst a stale temp directory — never a loadable-but-corrupt
+  checkpoint.  Restore reassembles full host arrays from the shard
+  files (verifying sizes and CRCs against the manifest) and commits
+  them to whatever shardings the *target* topology wants, which is what
+  makes save-on-DP=2/TP=2, resume-on-DP=4/TP=1 elastic restarts work.
+
+Disk layout (see docs/checkpointing.md for the full schema)::
+
+    <dir>/step_00000010/
+        manifest.json                 # leaves, shard index map, CRCs
+        shards/00000.00.npy           # leaf 0, shard 0
+        shards/00001.00.npy
+        ...
+    <dir>/.tmp-step_00000010-<pid>/   # in-flight write (ignored by scans)
+
+Fault injection for crash tests: pass ``fault_hook`` (called as
+``fault_hook(event, count)`` with events ``"shard"``,
+``"before_commit"``, ``"after_commit"``) or set
+``REPRO_CKPT_FAULT=<event>:<n>`` in the environment to ``os._exit(41)``
+on the n-th occurrence of the event — the subprocess crash-injection
+suite drives the real writer through both.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any
+import re
+import shutil
+import threading
+import zlib
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
+FORMAT = "repro-ckpt-v1"
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+FAULT_EXIT_CODE = 41
+
+
+class CheckpointError(Exception):
+    """Base class for checkpoint failures."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A committed checkpoint disagrees with its manifest (truncated,
+    missing, or bit-flipped shard files)."""
+
+
+class CheckpointDtypeError(CheckpointError):
+    """Saved leaf dtype differs from the restore target's dtype and no
+    explicit ``cast=True`` was given."""
+
+
+# ===================================================================== #
+# pytree path <-> flat string keys
+# ===================================================================== #
+def _esc(component: str) -> str:
+    """Escape the ``/`` separator (and the escape char itself) so no two
+    distinct pytree paths can flatten to the same joined key."""
+    return component.replace("%", "%25").replace("/", "%2F")
+
+
+def _path_key(path) -> str:
+    return "/".join(_esc(str(getattr(p, "key", getattr(p, "idx", p))))
+                    for p in path)
+
 
 def _flatten(tree) -> dict:
-    flat = {}
+    """Flatten to ``{escaped-path-key: host ndarray}``; raises on key
+    collisions (e.g. a ``GetAttrKey`` and a ``DictKey`` sharing a name)
+    instead of silently dropping a leaf."""
+    flat: dict = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        flat[key] = np.asarray(leaf)
-    return flat
+        key = _path_key(path)
+        if key in flat:
+            raise CheckpointError(
+                f"pytree key collision: two leaves flatten to {key!r} "
+                f"(paths {flat[key][0]!r} and {path!r})")
+        flat[key] = (path, np.asarray(leaf))
+    return {k: arr for k, (_, arr) in flat.items()}
 
 
+def _check_dtype(key: str, saved: np.ndarray, like_leaf, cast: bool):
+    want = np.dtype(getattr(like_leaf, "dtype", None) or saved.dtype)
+    if saved.dtype != want and not cast:
+        raise CheckpointDtypeError(
+            f"leaf {key!r} was saved as {saved.dtype} but the restore "
+            f"target is {want}; pass cast=True to convert explicitly")
+    return saved.astype(want) if saved.dtype != want else saved
+
+
+# ===================================================================== #
+# legacy single-file .npz API
+# ===================================================================== #
 def save(path: str, tree, metadata: dict | None = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     np.savez(path, **_flatten(tree))
@@ -31,20 +118,369 @@ def save(path: str, tree, metadata: dict | None = None) -> None:
             json.dump(metadata, f, indent=2)
 
 
-def load(path: str, like) -> Any:
-    """Restore into the structure of ``like`` (a pytree of arrays)."""
+def load(path: str, like, *, cast: bool = False) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays).
+
+    Shapes must match exactly; dtypes must match unless ``cast=True``
+    explicitly opts into conversion (a silent fp32 -> bf16 round-trip is
+    a precision bug, not a convenience)."""
     data = np.load(path if path.endswith(".npz") else path + ".npz")
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for p, leaf in paths:
-        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
-                       for q in p)
+        key = _path_key(p)
         arr = data[key]
-        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
-        leaves.append(arr.astype(leaf.dtype))
+        if arr.shape != leaf.shape:
+            raise CheckpointError(
+                f"leaf {key!r}: saved shape {arr.shape} != target "
+                f"shape {leaf.shape}")
+        leaves.append(_check_dtype(key, arr, leaf, cast))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def load_metadata(path: str) -> dict:
     with open(path + ".meta.json") as f:
         return json.load(f)
+
+
+# ===================================================================== #
+# sharded snapshot helpers
+# ===================================================================== #
+def _leaf_shards(leaf) -> list:
+    """Device-to-host snapshot of one array as ``[(index, ndarray)]``.
+
+    ``index`` is the per-dimension ``[start, stop]`` window this shard
+    covers (``None`` for a full axis); replicas are written once.  An
+    unsharded array (plain numpy, or a fully-replicated jax array)
+    yields a single full-window shard."""
+    shards = getattr(leaf, "addressable_shards", None)
+    if not shards:
+        return [([None] * np.ndim(leaf), np.asarray(leaf))]
+    out, seen = [], set()
+    full = tuple(int(d) for d in leaf.shape)
+    for s in shards:
+        idx = []
+        for d, sl in enumerate(s.index):
+            start = 0 if sl.start is None else int(sl.start)
+            stop = full[d] if sl.stop is None else int(sl.stop)
+            idx.append(None if (start, stop) == (0, full[d])
+                       else [start, stop])
+        idx = tuple(tuple(w) if w else None for w in idx)
+        if idx in seen:           # replica: already captured this window
+            continue
+        seen.add(idx)
+        out.append((list(idx), np.asarray(s.data)))
+    return out
+
+
+def _index_to_slices(index, shape) -> tuple:
+    return tuple(slice(None) if w is None else slice(w[0], w[1])
+                 for w in index)
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _env_fault_hook() -> Optional[Callable[[str, int], None]]:
+    """``REPRO_CKPT_FAULT=<event>:<n>`` -> hook that hard-exits the
+    process on the n-th occurrence of ``event`` (crash injection for the
+    subprocess fault-tolerance suite)."""
+    spec = os.environ.get("REPRO_CKPT_FAULT")
+    if not spec:
+        return None
+    event, n = spec.split(":")
+    n = int(n)
+
+    def hook(ev: str, count: int) -> None:
+        if ev == event and count >= n:
+            os._exit(FAULT_EXIT_CODE)
+    return hook
+
+
+# ===================================================================== #
+# CheckpointManager
+# ===================================================================== #
+class CheckpointManager:
+    """Async, sharded, atomically-committed checkpoints under ``directory``.
+
+    One write may be in flight at a time; :meth:`save` waits for the
+    previous write, snapshots device-to-host synchronously (so training
+    may immediately mutate the live arrays), then hands the host shards
+    to a background thread.  ``async_write=False`` degrades to a fully
+    synchronous save (the subprocess tests use it for determinism).
+    """
+
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_write: bool = True,
+                 fault_hook: Optional[Callable[[str, int], None]] = None):
+        self.directory = directory
+        self.keep = keep
+        self.async_write = async_write
+        self.fault_hook = fault_hook or _env_fault_hook()
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._fault_counts: dict = {}
+        os.makedirs(directory, exist_ok=True)
+        # stale temp dirs from a previous crashed writer are dead weight
+        for name in os.listdir(directory):
+            if name.startswith(".tmp-"):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
+
+    # ------------------------- bookkeeping ------------------------- #
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def all_steps(self) -> list:
+        """Committed steps (a manifest exists and parses), ascending."""
+        steps = []
+        for name in sorted(os.listdir(self.directory)):
+            m = _STEP_RE.match(name)
+            if not m:
+                continue
+            man = os.path.join(self.directory, name, "manifest.json")
+            try:
+                with open(man) as f:
+                    json.load(f)
+            except (OSError, ValueError):
+                continue              # uncommitted/damaged: not a candidate
+            steps.append(int(m.group(1)))
+        return steps
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def _fire(self, event: str) -> None:
+        if self.fault_hook is None:
+            return
+        n = self._fault_counts.get(event, 0) + 1
+        self._fault_counts[event] = n
+        self.fault_hook(event, n)
+
+    # ---------------------------- save ----------------------------- #
+    def save(self, step: int, tree, metadata: dict | None = None, *,
+             wait: bool = False) -> str:
+        """Snapshot ``tree`` and commit it as ``step``.
+
+        Returns the final checkpoint directory (which exists only once
+        the background write commits; call :meth:`wait_for_save` or pass
+        ``wait=True`` to block on durability)."""
+        self.wait_for_save()          # one in-flight write at a time
+        # deep-copy metadata NOW (json round-trip): the caller keeps
+        # mutating its metrics log while the background thread writes
+        metadata = json.loads(json.dumps(metadata or {}))
+        flat = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            key = _path_key(path)
+            if key in flat:
+                raise CheckpointError(
+                    f"pytree key collision at {key!r}")
+            flat[key] = _leaf_shards(leaf)     # the D2H copy, synchronous
+        final = self._step_dir(step)
+
+        if self.async_write and not wait:
+            self._thread = threading.Thread(
+                target=self._write_guarded,
+                args=(step, flat, metadata), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, flat, metadata)
+        return final
+
+    def _write_guarded(self, step, flat, metadata):
+        try:
+            self._write(step, flat, metadata)
+        except BaseException as e:                # surfaced on next wait
+            self._error = e
+
+    def _write(self, step: int, flat: dict, metadata: dict) -> None:
+        final = self._step_dir(step)
+        tmp = os.path.join(self.directory,
+                           f".tmp-step_{step:08d}-{os.getpid()}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        shards_dir = os.path.join(tmp, "shards")
+        os.makedirs(shards_dir)
+        leaves = {}
+        for i, (key, shards) in enumerate(flat.items()):
+            entries = []
+            for j, (index, arr) in enumerate(shards):
+                fname = f"{i:05d}.{j:02d}.npy"
+                fpath = os.path.join(shards_dir, fname)
+                with open(fpath, "wb") as f:
+                    np.save(f, arr)
+                    f.flush()
+                    os.fsync(f.fileno())
+                entries.append({
+                    "file": f"shards/{fname}",
+                    "index": index,
+                    "nbytes": os.path.getsize(fpath),
+                    "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+                })
+                self._fire("shard")
+            leaves[key] = {
+                "shape": self._full_shape(shards),
+                "dtype": str(shards[0][1].dtype),
+                "shards": entries,
+            }
+        manifest = {"format": FORMAT, "step": step, "leaves": leaves,
+                    "metadata": metadata}
+        man_path = os.path.join(tmp, "manifest.json")
+        with open(man_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(shards_dir)
+        _fsync_dir(tmp)
+        self._fire("before_commit")
+        if os.path.isdir(final):      # overwrite of a committed step
+            shutil.rmtree(final)
+        os.replace(tmp, final)        # THE commit point
+        _fsync_dir(self.directory)
+        self._fire("after_commit")
+        self._gc()
+
+    @staticmethod
+    def _full_shape(shards) -> list:
+        """Logical array shape from shard windows (max stop per dim)."""
+        ndim = shards[0][1].ndim
+        shape = [0] * ndim
+        for index, arr in shards:
+            for d in range(ndim):
+                w = index[d]
+                shape[d] = max(shape[d],
+                               arr.shape[d] if w is None else w[1])
+        return shape
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def wait_for_save(self) -> None:
+        """Block until the in-flight background write (if any) commits;
+        re-raise its failure here rather than losing it in the thread."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # --------------------------- restore --------------------------- #
+    def _manifest(self, step: int) -> dict:
+        man = os.path.join(self._step_dir(step), "manifest.json")
+        try:
+            with open(man) as f:
+                return json.load(f)
+        except OSError as e:
+            raise CheckpointError(
+                f"no committed checkpoint at step {step} "
+                f"under {self.directory}") from e
+
+    def restore_metadata(self, step: Optional[int] = None) -> dict:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise CheckpointError(f"no checkpoints in {self.directory}")
+        return self._manifest(step).get("metadata", {})
+
+    def _assemble_leaf(self, step_dir: str, key: str, entry: dict):
+        shape = tuple(entry["shape"])
+        arr = np.empty(shape, np.dtype(entry["dtype"]))
+        covered = 0
+        for sh in entry["shards"]:
+            fpath = os.path.join(step_dir, sh["file"])
+            if not os.path.exists(fpath):
+                raise CheckpointCorruptError(
+                    f"leaf {key!r}: shard file {sh['file']} is missing")
+            if os.path.getsize(fpath) != sh["nbytes"]:
+                raise CheckpointCorruptError(
+                    f"leaf {key!r}: shard file {sh['file']} is "
+                    f"{os.path.getsize(fpath)} bytes, manifest says "
+                    f"{sh['nbytes']} (torn write?)")
+            piece = np.load(fpath)
+            if zlib.crc32(piece.tobytes()) & 0xFFFFFFFF != sh["crc32"]:
+                raise CheckpointCorruptError(
+                    f"leaf {key!r}: shard file {sh['file']} fails its "
+                    f"manifest CRC")
+            arr[_index_to_slices(sh["index"], shape)] = piece
+            covered += piece.size
+        if covered != arr.size:
+            raise CheckpointCorruptError(
+                f"leaf {key!r}: shards cover {covered} of {arr.size} "
+                f"elements")
+        return arr
+
+    def restore(self, like, *, step: Optional[int] = None,
+                shardings=None, cast: bool = False):
+        """Load a checkpoint into the structure of ``like``.
+
+        ``like`` supplies pytree structure + expected shapes/dtypes (live
+        arrays or ShapeDtypeStructs both work).  ``shardings`` — a
+        matching tree of NamedShardings for the *target* mesh — commits
+        each reassembled host array to the new topology's layout, which
+        need not match the layout the checkpoint was saved under
+        (cross-topology / elastic restore).  Returns
+        ``(tree, metadata)``."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise CheckpointError(f"no checkpoints in {self.directory}")
+        manifest = self._manifest(step)
+        step_dir = self._step_dir(step)
+        leaves_meta = manifest["leaves"]
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        sh_leaves = (jax.tree_util.tree_leaves(shardings)
+                     if shardings is not None else [None] * len(paths))
+        if len(sh_leaves) != len(paths):
+            raise CheckpointError(
+                "shardings tree does not match the restore target")
+        out = []
+        for (p, leaf), sh in zip(paths, sh_leaves):
+            key = _path_key(p)
+            if key not in leaves_meta:
+                raise CheckpointError(
+                    f"checkpoint at step {step} has no leaf {key!r} "
+                    f"(saved tree structure differs)")
+            arr = self._assemble_leaf(step_dir, key, leaves_meta[key])
+            shape = tuple(getattr(leaf, "shape", arr.shape))
+            if arr.shape != shape:
+                raise CheckpointError(
+                    f"leaf {key!r}: saved shape {arr.shape} != target "
+                    f"shape {shape}")
+            arr = _check_dtype(key, arr, leaf, cast)
+            out.append(jax.device_put(arr, sh) if sh is not None else arr)
+        return (jax.tree_util.tree_unflatten(treedef, out),
+                manifest.get("metadata", {}))
+
+    def verify(self, step: Optional[int] = None) -> None:
+        """Integrity-check a committed checkpoint: every manifest shard
+        exists with the recorded size and CRC, and the shard directory
+        holds nothing the manifest doesn't list."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise CheckpointError(f"no checkpoints in {self.directory}")
+        manifest = self._manifest(step)
+        step_dir = self._step_dir(step)
+        listed = set()
+        for key, entry in manifest["leaves"].items():
+            self._assemble_leaf(step_dir, key, entry)
+            listed.update(sh["file"] for sh in entry["shards"])
+        on_disk = {os.path.join("shards", f)
+                   for f in os.listdir(os.path.join(step_dir, "shards"))}
+        if on_disk != listed:
+            raise CheckpointCorruptError(
+                f"step {step}: shard files on disk {sorted(on_disk)} != "
+                f"manifest listing {sorted(listed)}")

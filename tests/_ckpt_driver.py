@@ -1,0 +1,106 @@
+"""Subprocess driver for the crash-injection checkpoint suite.
+
+Runs the tiny 3-stage RLHF pipeline with fault-tolerant checkpointing
+and, on success, writes a JSON record of everything that must be
+bit-identical across crash/resume:
+
+- the deterministic per-iteration stage-3 metrics (wall-time telemetry
+  like ``gen_tok_s`` / ``reshard_s`` is dropped — it legitimately
+  differs between runs),
+- the PPO reward-score trajectory,
+- SHA-256 hashes of the final actor params, Adam moments, and EMA.
+
+Crash injection:
+
+- ``--die-at-iter K`` exits hard (code 37) at the top of PPO iteration
+  K after draining the in-flight async write — the "preemption with a
+  SIGTERM grace window" case (no drain for the torn-write cases below);
+- ``REPRO_CKPT_FAULT=<event>:<n>`` (read by CheckpointManager) hard-
+  exits (code 41) inside the background checkpoint writer — the
+  "crash mid-checkpoint-write" case.
+
+The harness in tests/test_checkpoint_resume.py launches this file via
+``sys.executable``; it is NOT a pytest module.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import (PPOConfig, RLHFEngine, RLHFPipeline,  # noqa: E402
+                        StageConfig)
+from repro.data import (ConstantTaskDataset, CopyTaskDataset,  # noqa: E402
+                        DataBlender)
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.training.checkpoint import CheckpointManager  # noqa: E402
+
+DIE_EXIT_CODE = 37
+V = 64
+ACTOR = ModelConfig(name="a", arch_type="dense", n_layers=1, d_model=32,
+                    n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=V,
+                    compute_dtype="float32", remat=False)
+CRITIC = ACTOR.replace(name="c")
+# wall-time telemetry: differs run-to-run, excluded from bit-identity
+NONDETERMINISTIC = ("gen_tok_s", "reshard_s")
+
+
+def tree_sha(tree) -> str:
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(tree):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--ppo-steps", type=int, default=3)
+    ap.add_argument("--save-every", type=int, default=1)
+    ap.add_argument("--die-at-iter", type=int, default=None)
+    args = ap.parse_args()
+
+    ds = [ConstantTaskDataset(200, 6, 6, V, seed=1),
+          CopyTaskDataset(200, 6, 6, V, seed=2)]
+    bl = DataBlender(ds, [0.7, 0.3], seed=0)
+    eng = RLHFEngine(ACTOR, CRITIC, jax.random.PRNGKey(0))
+    ckpt = (CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None)
+    pipe = RLHFPipeline(
+        eng, bl,
+        StageConfig(sft_steps=2, sft_batch=4, rm_steps=2, rm_batch=4,
+                    ppo_steps=args.ppo_steps, ppo_batch=4, seed=0),
+        PPOConfig(max_new_tokens=4, temperature=1.0),
+        checkpointer=ckpt, save_every=args.save_every)
+
+    if args.die_at_iter is not None:
+        def die(i):
+            if i == args.die_at_iter:
+                if ckpt is not None:        # preemption grace window:
+                    ckpt.wait_for_save()    # drain the in-flight write,
+                os._exit(DIE_EXIT_CODE)     # then die hard (no atexit)
+        pipe.iter_hook = die
+
+    out = pipe.run()
+    record = {
+        "scores": out["ppo_scores"],
+        "stage3": [{k: v for k, v in m.items()
+                    if k not in NONDETERMINISTIC}
+                   for m in pipe.log["stage3"]],
+        "actor_sha": tree_sha(pipe.trainer.actor),
+        "ema_sha": tree_sha(pipe.trainer.ema),
+        "critic_sha": tree_sha(pipe.trainer.critic),
+    }
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,298 @@
+"""Fault-tolerant RLHF: crash-injection + elastic-resume acceptance.
+
+The headline suite for the async sharded checkpointer
+(``repro.training.checkpoint.CheckpointManager``):
+
+- a subprocess harness preempts a real RLHF training run mid-iteration
+  (drains the in-flight async write — the SIGTERM grace window — then
+  ``os._exit``, no atexit), resumes from the latest valid manifest, and
+  asserts the continued run is **bit-identical** to an uninterrupted
+  run from the same seed (metrics stream, reward trajectory, and
+  SHA-256 of actor/critic/EMA state);
+- a second harness crashes the *background checkpoint writer itself*
+  mid-write (``REPRO_CKPT_FAULT``) and asserts atomic commit: the torn
+  write is invisible, the previous checkpoint stays loadable, and the
+  resumed run still matches the uninterrupted one;
+- cross-topology restore (save on DP=2/TP=2, resume on DP=4/TP=1 or a
+  single device) runs under the multi-device CI matrix: restored state
+  is bitwise what was saved, and the continued PPO step matches the
+  single-topology continuation within the fp32 mesh tolerance.
+
+The subprocess legs run in tier-1 (single device); the cross-topology
+legs are marked ``multidevice`` and run in the ``checkpoint-resume``
+CI matrix case under the 8-fake-device ``XLA_FLAGS`` recipe.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training.checkpoint import (FAULT_EXIT_CODE, CheckpointManager)
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(TESTS_DIR)
+DRIVER = os.path.join(TESTS_DIR, "_ckpt_driver.py")
+DIE_EXIT_CODE = 37                  # _ckpt_driver's simulated preemption
+
+
+def run_driver(*args, fault=None, check=True):
+    env = dict(os.environ,
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(REPO_ROOT, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)      # subprocess runs single-device
+    env.pop("REPRO_CKPT_FAULT", None)
+    if fault is not None:
+        env["REPRO_CKPT_FAULT"] = fault
+    proc = subprocess.run([sys.executable, DRIVER, *map(str, args)],
+                          env=env, cwd=REPO_ROOT, capture_output=True,
+                          text=True, timeout=600)
+    if check and proc.returncode != 0:
+        raise AssertionError(
+            f"driver exited {proc.returncode}\n--- stdout ---\n"
+            f"{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    return proc
+
+
+@pytest.fixture(scope="module")
+def uninterrupted(tmp_path_factory):
+    """One uninterrupted reference run (no checkpointing: also proves
+    saving never perturbs training numerics)."""
+    out = tmp_path_factory.mktemp("ref") / "ref.json"
+    run_driver("--out", out)
+    with open(out) as f:
+        return json.load(f)
+
+
+def assert_bit_identical(ref: dict, got: dict):
+    assert got["scores"] == ref["scores"]
+    assert len(got["stage3"]) == len(ref["stage3"])
+    for i, (a, b) in enumerate(zip(ref["stage3"], got["stage3"])):
+        assert a == b, f"iteration {i} metrics diverge: {a} vs {b}"
+    for k in ("actor_sha", "critic_sha", "ema_sha"):
+        assert got[k] == ref[k], f"{k} differs after resume"
+
+
+def test_kill_mid_run_then_resume_bit_identical(uninterrupted, tmp_path):
+    """THE acceptance gate: hard-kill a checkpointed run at the top of
+    PPO iteration 1 (of 3), rerun with the same flags, and get exactly
+    the uninterrupted run's remaining iterations — metrics, reward
+    trajectory, and final actor/critic/EMA bits."""
+    ckpt, out = tmp_path / "ckpt", tmp_path / "out.json"
+    proc = run_driver("--ckpt-dir", ckpt, "--out", out,
+                      "--die-at-iter", 1, check=False)
+    assert proc.returncode == DIE_EXIT_CODE, proc.stderr
+    assert not out.exists()         # died before finishing
+
+    mgr = CheckpointManager(str(ckpt))
+    latest = mgr.latest_step()
+    assert latest == 3              # sft=1, rm=2, then ppo iteration 0
+    mgr.verify(latest)              # the survivor is internally consistent
+    assert mgr.restore_metadata(latest)["ppo_iter"] == 1
+
+    run_driver("--ckpt-dir", ckpt, "--out", out)
+    with open(out) as f:
+        assert_bit_identical(uninterrupted, json.load(f))
+
+
+def test_crash_mid_checkpoint_write_is_atomic(uninterrupted, tmp_path):
+    """Kill the background writer between finishing the temp dir and
+    committing it (the 3rd save = the first stage-3 checkpoint): the
+    torn write must be invisible, the previous checkpoint must stay
+    loadable, and the resume must still match the uninterrupted run."""
+    ckpt, out = tmp_path / "ckpt", tmp_path / "out.json"
+    proc = run_driver("--ckpt-dir", ckpt, "--out", out, check=False,
+                      fault="before_commit:3")
+    assert proc.returncode == FAULT_EXIT_CODE, proc.stderr
+    # the torn write left a temp dir, never a committed step
+    assert any(n.startswith(".tmp-") for n in os.listdir(ckpt))
+
+    mgr = CheckpointManager(str(ckpt))   # also sweeps the stale temp dir
+    assert not any(n.startswith(".tmp-") for n in os.listdir(ckpt))
+    assert mgr.latest_step() == 2        # the rm_done boundary survived
+    mgr.verify(2)
+    assert mgr.restore_metadata(2)["stage"] == "rm_done"
+
+    run_driver("--ckpt-dir", ckpt, "--out", out)
+    with open(out) as f:
+        assert_bit_identical(uninterrupted, json.load(f))
+
+
+def test_crash_mid_shard_write_is_atomic(uninterrupted, tmp_path):
+    """Kill the writer halfway through the shard files themselves (the
+    5th shard of the first save): no commit at all, and a fresh run
+    starts cleanly from nothing."""
+    ckpt, out = tmp_path / "ckpt", tmp_path / "out.json"
+    proc = run_driver("--ckpt-dir", ckpt, "--out", out, check=False,
+                      fault="shard:5")
+    assert proc.returncode == FAULT_EXIT_CODE, proc.stderr
+    assert CheckpointManager(str(ckpt)).latest_step() is None
+
+    run_driver("--ckpt-dir", ckpt, "--out", out)
+    with open(out) as f:
+        assert_bit_identical(uninterrupted, json.load(f))
+
+
+def test_writer_failure_surfaces_and_keeps_previous(tmp_path):
+    """A writer that *fails* (exception, not crash) must surface the
+    error on the next wait and leave the previous checkpoint as the
+    latest valid one — in-process twin of the subprocess atomicity
+    tests."""
+    boom = RuntimeError("disk on fire")
+
+    def hook(event, count):
+        if event == "shard" and count > 3:      # first save has 3 shards
+            raise boom
+    tree = {"a": np.arange(6.0), "b": np.ones((2, 2)), "c": np.zeros(3)}
+    mgr = CheckpointManager(str(tmp_path), fault_hook=hook)
+    mgr.save(1, tree, {"i": 1}, wait=True)      # 3 shards: under the fuse
+    with pytest.raises(RuntimeError):
+        mgr.save(2, tree, {"i": 2}, wait=True)
+    assert mgr.latest_step() == 1
+    mgr.verify(1)
+    restored, meta = mgr.restore(tree)
+    assert meta == {"i": 1}
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(a, b)
+
+    # async flavor: the failure parks in the thread, resurfaces on wait
+    mgr2 = CheckpointManager(str(tmp_path / "async"), fault_hook=hook)
+    mgr2._fault_counts.clear()
+    mgr2.save(1, tree)
+    mgr2.wait_for_save()
+    mgr2.save(2, tree)
+    with pytest.raises(RuntimeError):
+        mgr2.wait_for_save()
+    assert mgr2.latest_step() == 1
+
+
+# ===================================================================== #
+# cross-topology restore (the multi-device CI `checkpoint-resume` case)
+# ===================================================================== #
+pytest_plugins: list = []
+
+V = 64
+
+
+def _mk_trainer(engine):
+    from repro.core.ppo import PPOConfig, PPOTrainer
+    from repro.models import reward as R
+    from repro.models import transformer as T
+    from repro.models.config import ModelConfig
+    actor = ModelConfig(name="a", arch_type="dense", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                        vocab_size=V, compute_dtype="float32",
+                        remat=False)
+    critic = actor.replace(name="c")
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    return PPOTrainer(
+        actor_cfg=actor, critic_cfg=critic,
+        actor_params=T.init_params(actor, ks[0]),
+        critic_params=R.init_params(critic, ks[1]),
+        ref_params=T.init_params(actor, ks[0]),
+        reward_params=R.init_params(critic, ks[2]),
+        ppo=PPOConfig(max_new_tokens=8, temperature=0.0, eos_id=3),
+        engine=engine)
+
+
+def _engine_for(dp, tp):
+    from repro.core.hybrid_engine import HybridEngine
+    from repro.launch.mesh import make_mesh
+    from repro.models.config import ModelConfig
+    actor = ModelConfig(name="a", arch_type="dense", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                        vocab_size=V, compute_dtype="float32",
+                        remat=False)
+    return (None if (dp, tp) == (1, 1)
+            else HybridEngine(actor, make_mesh(dp, tp)))
+
+
+PROMPTS = np.asarray(jax.random.randint(jax.random.PRNGKey(9), (4, 6),
+                                        0, V))
+KEY = jax.random.PRNGKey(7)
+# fp32 tolerance for cross-layout numerics (see tests/test_multidevice.py)
+RTOL, ATOL = 2e-4, 2e-5
+
+
+def _resume_on(mgr, dp, tp):
+    """Restore the saved trainer state onto a (dp, tp) topology and run
+    one more experience + PPO step there."""
+    tr = _mk_trainer(_engine_for(dp, tp))
+    like = {"trainer": tr.state_tree(), "rng": np.asarray(KEY)}
+    tree, meta = mgr.restore(like)
+    restored_host = jax.tree.map(np.asarray, tree["trainer"])
+    tr.load_state_tree(tree["trainer"])
+    exp, _ = tr.generate_experience(jnp.asarray(PROMPTS),
+                                    jnp.asarray(tree["rng"]))
+    metrics = tr.train_rlhf(exp)
+    return tr, restored_host, exp, metrics, meta
+
+
+@pytest.mark.multidevice
+def test_cross_topology_checkpoint_resume_dp2_tp2_to_dp4_tp1(tmp_path):
+    """Save a mid-run sharded TrainState under DP=2/TP=2; resume on
+    DP=4/TP=1 AND on a single device.  The restored bits must be exactly
+    what was saved (topology-independent), and the continued PPO step on
+    the new topology must match the single-device continuation within
+    the fp32 mesh tolerance."""
+    import json as _json
+    tr = _mk_trainer(_engine_for(2, 2))
+    key = KEY
+    key, k = jax.random.split(key)
+    exp, _ = tr.generate_experience(jnp.asarray(PROMPTS), k)
+    tr.train_rlhf(exp)
+
+    mgr = CheckpointManager(str(tmp_path / "ckpt"))
+    mgr.save(1, {"trainer": tr.state_tree(), "rng": np.asarray(key)},
+             {"ppo_iter": 1}, wait=True)
+    saved_host = jax.tree.map(np.asarray, tr.state_tree())
+
+    # the checkpoint is genuinely sharded: some leaf wrote >1 shard file
+    man_path = tmp_path / "ckpt" / "step_00000001" / "manifest.json"
+    with open(man_path) as f:
+        manifest = _json.load(f)
+    assert any(len(e["shards"]) > 1 for e in manifest["leaves"].values())
+
+    _, host_41, exp_41, m_41, _ = _resume_on(mgr, 4, 1)
+    _, host_11, exp_11, m_11, _ = _resume_on(mgr, 1, 1)
+
+    # restored state is bitwise the saved state, on every topology
+    for host in (host_41, host_11):
+        for a, b in zip(jax.tree.leaves(saved_host),
+                        jax.tree.leaves(host)):
+            np.testing.assert_array_equal(a, b)
+
+    # greedy continuation decodes identical tokens across topologies
+    np.testing.assert_array_equal(np.asarray(exp_11.sequences),
+                                  np.asarray(exp_41.sequences))
+    # and the continued PPO step agrees within the fp32 mesh tolerance
+    for k2, v in m_11.items():
+        np.testing.assert_allclose(v, m_41[k2], rtol=RTOL, atol=ATOL,
+                                   err_msg=f"{k2} dp4_tp1 vs single")
+
+
+@pytest.mark.multidevice
+def test_cross_topology_checkpoint_resume_roundtrip_dp2_tp2(tmp_path):
+    """Same-topology restore control: save and resume both on DP=2/TP=2;
+    the continued step matches the single-device continuation too (so
+    the dp4_tp1 leg above isn't vacuously comparing two broken paths)."""
+    tr = _mk_trainer(_engine_for(2, 2))
+    key, k = jax.random.split(KEY)
+    exp, _ = tr.generate_experience(jnp.asarray(PROMPTS), k)
+    tr.train_rlhf(exp)
+    mgr = CheckpointManager(str(tmp_path / "ckpt"))
+    mgr.save(1, {"trainer": tr.state_tree(), "rng": np.asarray(key)},
+             wait=True)
+
+    _, _, exp_22, m_22, _ = _resume_on(mgr, 2, 2)
+    _, _, exp_11, m_11, _ = _resume_on(mgr, 1, 1)
+    np.testing.assert_array_equal(np.asarray(exp_11.sequences),
+                                  np.asarray(exp_22.sequences))
+    for k2, v in m_11.items():
+        np.testing.assert_allclose(v, m_22[k2], rtol=RTOL, atol=ATOL,
+                                   err_msg=f"{k2} dp2_tp2 vs single")

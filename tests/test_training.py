@@ -5,6 +5,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models.config import ModelConfig
 from repro.models import transformer as T
@@ -102,6 +103,85 @@ def test_checkpoint_roundtrip():
         assert checkpoint.load_metadata(path)["arch"] == "t"
 
 
+def test_checkpoint_dtype_mismatch_raises():
+    """A checkpoint saved in fp32 must NOT silently round-trip into a
+    bf16 tree: dtype mismatch raises unless cast=True opts in."""
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "w.npz")
+        checkpoint.save(path, {"w": np.ones(4, np.float32)})
+        like_bf16 = {"w": jnp.zeros(4, jnp.bfloat16)}
+        with pytest.raises(checkpoint.CheckpointDtypeError):
+            checkpoint.load(path, like_bf16)
+        cast = checkpoint.load(path, like_bf16, cast=True)
+        assert cast["w"].dtype == jnp.bfloat16
+
+        mgr = checkpoint.CheckpointManager(os.path.join(d, "m"),
+                                           async_write=False)
+        mgr.save(1, {"w": np.ones(4, np.float32)})
+        with pytest.raises(checkpoint.CheckpointDtypeError):
+            mgr.restore(like_bf16)
+        cast, _ = mgr.restore(like_bf16, cast=True)
+        assert np.asarray(cast["w"]).dtype == jnp.bfloat16
+
+
+def test_flatten_escapes_separator_keys():
+    """A dict key containing '/' must not alias a nested path: both
+    leaves survive a save/load round-trip distinctly."""
+    tree = {"a": {"b": np.ones(2, np.float32)},
+            "a/b": np.full(2, 7.0, np.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.npz")
+        checkpoint.save(path, tree)
+        restored = checkpoint.load(path, tree)
+        np.testing.assert_array_equal(restored["a"]["b"], np.ones(2))
+        np.testing.assert_array_equal(restored["a/b"], np.full(2, 7.0))
+
+
+class _DupKeys:
+    """Custom pytree node whose two children flatten to the SAME key."""
+
+    def __init__(self, x, y):
+        self.x, self.y = x, y
+
+
+jax.tree_util.register_pytree_with_keys(
+    _DupKeys,
+    lambda d: ((("same", d.x), ("same", d.y)), None),
+    lambda aux, ch: _DupKeys(*ch))
+
+
+def test_flatten_key_collision_raises():
+    """Two pytree paths flattening to one string is data loss waiting to
+    happen: save refuses instead of silently keeping one leaf."""
+    tree = {"n": _DupKeys(np.ones(2), np.zeros(2))}
+    with pytest.raises(checkpoint.CheckpointError):
+        checkpoint.save(os.path.join(tempfile.gettempdir(), "dup.npz"),
+                        tree)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = checkpoint.CheckpointManager(d, async_write=False)
+        with pytest.raises(checkpoint.CheckpointError):
+            mgr.save(1, tree)
+
+
+def test_data_blender_skip_is_a_cursor():
+    """skip=k fast-forwards every batch stream to exactly where an
+    uninterrupted run's batch k starts — the resume data cursor."""
+    from repro.data import CopyTaskDataset, DataBlender, SortTaskDataset
+
+    def mk():
+        return DataBlender([CopyTaskDataset(500, 4, 4, 64, seed=1),
+                            SortTaskDataset(500, 4, 4, 64, seed=2)],
+                           seed=3)
+    for stream in ("sft_batches", "reward_batches", "prompt_batches",
+                   "pretrain_batches"):
+        full = list(getattr(mk(), stream)(4, 6))
+        tail = list(getattr(mk(), stream)(4, 6, skip=4))
+        assert len(tail) == 2
+        for a, b in zip(full[4:], tail):
+            for k in a:
+                np.testing.assert_array_equal(a[k], b[k], err_msg=f"{stream}/{k}")
+
+
 def test_cosine_schedule_shape():
     fn = schedules.cosine_warmup(1.0, warmup=10, total=100, min_ratio=0.1)
     assert float(fn(0)) == 0.0
@@ -125,6 +205,37 @@ def test_train_cli_mesh_flag(monkeypatch, capsys):
     out = capsys.readouterr().out
     assert "mesh={'data': 1, 'model': 1} strategy=tp zero=1" in out
     assert "loss=" in out
+
+
+def test_train_cli_checkpoint_resume(monkeypatch, capsys, tmp_path):
+    """--ckpt-dir/--save-every/--resume on the launcher: delete the
+    newest checkpoint (a 'crash' between saves), resume from the
+    survivor, and land on the same step-3 loss/gnorm the uninterrupted
+    run printed."""
+    import re
+    import shutil
+    import sys
+    from repro.launch import train as train_cli
+
+    def run(*extra):
+        monkeypatch.setattr(sys, "argv", [
+            "train", "--arch", "smollm-135m", "--reduced", "--steps", "4",
+            "--batch", "4", "--seq", "16", *extra])
+        train_cli.main()
+        return capsys.readouterr().out
+
+    d = str(tmp_path / "ckpt")
+    out_full = run("--ckpt-dir", d, "--save-every", "2")
+    # saves at steps 2 and 4; drop the newest -> latest valid is step 2
+    shutil.rmtree(tmp_path / "ckpt" / "step_00000004")
+    out_resumed = run("--ckpt-dir", d, "--save-every", "2", "--resume")
+    assert "resumed from step 1" in out_resumed
+
+    def final_metrics(out):
+        m = re.search(r"step\s+3\s+(loss=\S+\s+gnorm=\S+)", out)
+        assert m, out
+        return m.group(1)
+    assert final_metrics(out_resumed) == final_metrics(out_full)
 
 
 def test_train_state_create_with_shardings():
