@@ -73,3 +73,149 @@ def _measured_stage_breakdown():
     rows.append(("t46_measured_stage3_gen_tok_s", pipe.gen_tok_s,
                  "engine_early_exit_path"))
     return rows
+
+
+# ------------------------------------------------------------------- #
+# measured: disaggregated async RLHF vs the sync hybrid baseline — the
+# async tentpole's receipt.  The sync hybrid engine time-shares ONE
+# mesh: every iteration pays gen + train + two reshards.  The
+# disaggregated topology splits the same devices into a rollout mesh
+# and a training mesh; generation of batch N+1 overlaps training of
+# batch N, so the steady-state iteration costs max(gen, train) plus
+# one (cheap, one-way) weight publish.
+#
+# The headline ratio is COMPOSED from measured phase times rather than
+# read off one noisy overlapped wall clock: CPU CI machines jitter by
+# 2-3x across seconds, but the composition max(gen, train) + publish
+# over gen + train + 2*reshard is exact in steady state (the producer
+# thread is gated at most one step ahead, so both phases really do run
+# concurrently — tests/test_async_rlhf.py proves the machinery).
+# ------------------------------------------------------------------- #
+def disaggregated_rows(*, smoke: bool = False):
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    if len(jax.devices()) < 4:
+        return [("rlhf_async_iter_ratio", -1.0,
+                 "needs>=4_devices_run_under_xla_force_host_platform")]
+
+    from repro.core import PPOConfig, PPOTrainer
+    from repro.core.hybrid_engine import HybridEngine
+    from repro.core.replay import WeightPublisher
+    from repro.launch.mesh import make_disaggregated_meshes, make_mesh
+    from repro.models import reward as RW
+    from repro.models import transformer as T
+    from repro.models.config import ModelConfig
+
+    V = 64
+    iters = 2 if smoke else 4
+    max_new = 4 if smoke else 8
+    actor = ModelConfig(name="a", arch_type="dense", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                        vocab_size=V, compute_dtype="float32", remat=False)
+    critic = actor.replace(name="c")
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    init = dict(actor_cfg=actor, critic_cfg=critic,
+                actor_params=T.init_params(actor, k1),
+                critic_params=RW.init_params(critic, k2),
+                ref_params=T.init_params(actor, k1),
+                reward_params=RW.init_params(critic, k2),
+                ppo=PPOConfig(max_new_tokens=max_new, temperature=1.0))
+    prompts = jnp.asarray(np.full((8, 6), 3, np.int32))
+
+    def timed(fn, *a, **kw):
+        t0 = time.perf_counter()
+        out = fn(*a, **kw)
+        jax.block_until_ready(out)
+        return out, time.perf_counter() - t0
+
+    def phase_times(trainer, *, publisher=None):
+        """Mean per-phase seconds over ``iters`` iterations (after one
+        full warmup iteration that eats the compiles)."""
+        gen_s, train_s, reshard_s = [], [], []
+        key = jax.random.PRNGKey(7)
+        for it in range(iters + 1):
+            key, k = jax.random.split(key)
+            gp = publisher.latest()[0] if publisher is not None else None
+            (rollout, gm), tg = timed(trainer.generate_rollout, prompts,
+                                      k, gen_params=gp)
+            (exp, _), ts = timed(trainer.score_rollout, rollout)
+            _, tt = timed(trainer.train_rlhf, exp)
+            if publisher is not None:
+                publisher.publish(trainer.actor.params, it + 1)
+            if it == 0:
+                continue                       # warmup: compiles
+            rs = gm.get("reshard_s", 0.0)
+            gen_s.append(tg - rs)              # pure decode
+            train_s.append(ts + tt)            # score + PPO step
+            reshard_s.append(rs)
+        return (float(np.mean(gen_s)), float(np.mean(train_s)),
+                float(np.mean(reshard_s)))
+
+    # sync hybrid baseline: one time-shared 2x2 mesh over all 4 devices
+    full = make_mesh(2, 2)
+    sync = PPOTrainer(engine=HybridEngine(actor, full), **init)
+    g_f, t_f, r_f = phase_times(sync)
+    sync_iter = g_f + t_f + 2.0 * r_f          # reshard there AND back
+
+    # disaggregated: 1x2 TP rollout mesh | 2x1 DP train mesh (disjoint)
+    rm, tm = make_disaggregated_meshes(rollout=2, train=2)
+    disagg = PPOTrainer(engine=HybridEngine(actor, tm), rollout_mesh=rm,
+                        **init)
+    pub = WeightPublisher(shardings=disagg.publish_shardings())
+    pub.publish(disagg.actor.params, 0)        # warm the transfer path
+    g_d, t_d, _ = phase_times(disagg, publisher=pub)
+    p_d = float(pub.last_publish_stats["seconds"])
+    async_iter = max(g_d, t_d) + p_d           # gen(N+1) overlaps train(N)
+
+    ratio = async_iter / sync_iter
+    return [
+        ("rlhf_sync_hybrid_iter_s", sync_iter,
+         f"gen={g_f:.3f}+train={t_f:.3f}+2x_reshard={r_f:.3f}@2x2"),
+        ("rlhf_disagg_gen_s", g_d, "rollout_mesh=1x2_tp"),
+        ("rlhf_disagg_train_s", t_d, "train_mesh=2x1_dp"),
+        ("rlhf_disagg_publish_s", p_d,
+         f"bytes={pub.last_publish_stats['bytes']:.0f}_one_way"),
+        ("rlhf_async_iter_projected_s", async_iter,
+         "max(gen,train)+publish_steady_state"),
+        ("rlhf_async_iter_ratio", ratio, "target<=0.7x_of_sync_hybrid"),
+    ]
+
+
+def main(argv=None):
+    """CLI entrypoint mirroring ``benchmarks.effective_throughput``;
+    ``--disaggregated`` runs the async-vs-sync-hybrid rows (needs >= 4
+    devices — CI uses the 8-fake-device ``XLA_FLAGS`` recipe),
+    ``--smoke`` shrinks them to CI size, and ``--json PATH`` writes the
+    rows for ``tools/bench_compare.py``."""
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--disaggregated", action="store_true",
+                    help="measured async-vs-sync-hybrid iteration rows")
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down measured rows for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON for bench_compare")
+    args = ap.parse_args(argv)
+    if args.disaggregated:
+        rows = disaggregated_rows(smoke=args.smoke)
+    elif args.smoke:
+        rows = _measured_stage_breakdown()
+    else:
+        rows = run()
+    for name, val, note in rows:
+        print(f"{name},{val:.4g},{note}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({name: {"value": float(val), "note": note}
+                       for name, val, note in rows}, f, indent=2,
+                      sort_keys=True)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,12 @@ from repro.core import ema, experience, lora
 from repro.core.hybrid_engine import HybridEngine
 from repro.core.pipeline import RLHFEngine, RLHFPipeline, StageConfig
 from repro.core.ppo import PPOConfig, PPOTrainer
+from repro.core.replay import (AsyncConfig, ExperienceProducer,
+                               ReplayClosed, ReplayQueue, ReplayTimeout,
+                               RolloutBatch, WeightPublisher)
 
 __all__ = ["ema", "experience", "lora", "HybridEngine", "RLHFEngine",
-           "RLHFPipeline", "StageConfig", "PPOConfig", "PPOTrainer"]
+           "RLHFPipeline", "StageConfig", "PPOConfig", "PPOTrainer",
+           "AsyncConfig", "ExperienceProducer", "ReplayClosed",
+           "ReplayQueue", "ReplayTimeout", "RolloutBatch",
+           "WeightPublisher"]

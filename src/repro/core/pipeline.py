@@ -22,6 +22,8 @@ import numpy as np
 from repro.core import lora as LoRA
 from repro.core.hybrid_engine import HybridEngine
 from repro.core.ppo import PPOConfig, PPOTrainer
+from repro.core.replay import (AsyncConfig, ExperienceProducer,
+                               ReplayQueue, WeightPublisher)
 from repro.data.blending import DataBlender
 from repro.models import reward as R
 from repro.models import transformer as T
@@ -48,7 +50,8 @@ class RLHFEngine:
     """Owns actor/ref/critic/reward params + the Hybrid Engine."""
 
     def __init__(self, actor_cfg: ModelConfig, critic_cfg: ModelConfig,
-                 key, mesh=None, train_strategy="zero3"):
+                 key, mesh=None, train_strategy="zero3",
+                 rollout_mesh=None):
         self.actor_cfg, self.critic_cfg = actor_cfg, critic_cfg
         k1, k2 = jax.random.split(key)
         self.actor_params = T.init_params(actor_cfg, k1)
@@ -58,6 +61,9 @@ class RLHFEngine:
         self.hybrid = (HybridEngine(actor_cfg, mesh,
                                     train_strategy=train_strategy)
                        if mesh is not None else None)
+        # disaggregated mode: a dedicated generation mesh, disjoint from
+        # the training mesh (launch.mesh.make_disaggregated_meshes)
+        self.rollout_mesh = rollout_mesh
 
 
 class RLHFPipeline:
@@ -77,16 +83,22 @@ class RLHFPipeline:
 
     def __init__(self, engine: RLHFEngine, blender: DataBlender,
                  stages: StageConfig, ppo: PPOConfig,
-                 checkpointer=None, save_every: int = 1):
+                 checkpointer=None, save_every: int = 1,
+                 async_cfg: Optional[AsyncConfig] = None):
         self.e = engine
         self.blender = blender
         self.stages = stages
         self.ppo = ppo
         self.ckpt = checkpointer
         self.save_every = save_every
+        self.async_cfg = async_cfg  # disaggregated/overlapped stage 3
         self.iter_hook = None      # called as iter_hook(i) at the top of
         #                            each PPO iteration (telemetry; the
         #                            crash-injection tests die here)
+        self.rollout_hook = None   # async mode: called as rollout_hook(i)
+        #                            on the PRODUCER thread before batch i
+        #                            (soak tests inject slow phases here)
+        self.async_stats = {}      # queue/publisher/producer telemetry
         self.log = {"stage1": [], "stage2": [], "stage3": []}
         self.rm_acc = []
         self.timings = {}          # seconds per stage
@@ -161,7 +173,8 @@ class RLHFPipeline:
             critic_params=self.e.critic_params,
             ref_params=self.e.ref_params,
             reward_params=self.e.reward_params,
-            ppo=self.ppo, engine=self.e.hybrid)
+            ppo=self.ppo, engine=self.e.hybrid,
+            rollout_mesh=getattr(self.e, "rollout_mesh", None))
         if restored is not None:
             trainer.load_state_tree(restored["trainer"])
         ptx_iter = (self.blender.pretrain_batches(st.ppo_batch,
@@ -170,25 +183,30 @@ class RLHFPipeline:
         scores = [m["reward_score"] for m in self.log["stage3"]]
         t0 = time.perf_counter()
         elapsed = self.timings.get("stage3", 0.0) if restored else 0.0
-        for i, batch in enumerate(self.blender.prompt_batches(
-                st.ppo_batch, st.ppo_steps, skip=start), start=start):
-            if self.iter_hook is not None:
-                self.iter_hook(i)
-            key, k = jax.random.split(key)
-            exp, gm = trainer.generate_experience(
-                jnp.asarray(batch["prompts"]), k)
-            ptx = None
-            if ptx_iter is not None:
-                ptx = {k2: jnp.asarray(v) for k2, v in next(ptx_iter).items()}
-            tm = trainer.train_rlhf(exp, ptx)
-            scores.append(gm["reward_score"])
-            self.log["stage3"].append({**gm, **tm})
-            if (self.ckpt is not None and self.save_every
-                    and ((i + 1) % self.save_every == 0
-                         or i == st.ppo_steps - 1)):
-                self.timings["stage3"] = (elapsed
-                                          + time.perf_counter() - t0)
-                self._save_ppo(trainer, key, i + 1)
+        if self.async_cfg is not None:
+            self._run_ppo_async(trainer, key, start, scores, ptx_iter,
+                                t0, elapsed)
+        else:
+            for i, batch in enumerate(self.blender.prompt_batches(
+                    st.ppo_batch, st.ppo_steps, skip=start), start=start):
+                if self.iter_hook is not None:
+                    self.iter_hook(i)
+                key, k = jax.random.split(key)
+                exp, gm = trainer.generate_experience(
+                    jnp.asarray(batch["prompts"]), k)
+                ptx = None
+                if ptx_iter is not None:
+                    ptx = {k2: jnp.asarray(v)
+                           for k2, v in next(ptx_iter).items()}
+                tm = trainer.train_rlhf(exp, ptx)
+                scores.append(gm["reward_score"])
+                self.log["stage3"].append({**gm, **tm})
+                if (self.ckpt is not None and self.save_every
+                        and ((i + 1) % self.save_every == 0
+                             or i == st.ppo_steps - 1)):
+                    self.timings["stage3"] = (elapsed
+                                              + time.perf_counter() - t0)
+                    self._save_ppo(trainer, key, i + 1)
         self.timings["stage3"] = elapsed + time.perf_counter() - t0
         # serving-grade generation telemetry (engine early-exit decode);
         # kept out of ``timings`` which holds seconds only
@@ -200,6 +218,105 @@ class RLHFPipeline:
         if self.ckpt is not None:
             self.ckpt.wait_for_save()     # durable before we return
         return scores
+
+    # ------------------- Step 3, async (disaggregated) ------------- #
+    def _run_ppo_async(self, trainer, key, start, scores, ptx_iter,
+                       t0, elapsed):
+        """Overlapped stage 3: a free-running producer thread generates
+        batch N+1 on the rollout mesh while this (consumer) thread
+        scores + trains batch N on the training mesh.
+
+        Staleness protocol: the consumer's policy ``version`` counts
+        completed PPO steps; after every ``publish_every``-th step the
+        fresh actor params are pushed to the rollout layout and the
+        train-layout tree is retained per version.  The producer may
+        generate batch ``i`` only under a published version
+        ``>= i - max_lag``, each rollout is scored with its OWN tagged
+        behavior policy (exact importance ratios), and consuming with
+        ``lag > 0`` emits the guard metrics; ``is_ratio_max`` above
+        ``is_ratio_abort`` drops the run to on-policy lockstep.
+
+        With ``max_lag=0`` (lockstep) the gate admits exactly the data,
+        params, and PRNG chain of the sync loop, so the run is
+        bit-identical to it — including checkpoints, because this
+        thread mirrors the sync per-iteration key split (the producer
+        owns the live chain) and saves the same carry.
+        """
+        st, acfg = self.stages, self.async_cfg
+        publisher = WeightPublisher(shardings=trainer.publish_shardings(),
+                                    keep=acfg.max_lag + 2,
+                                    async_push=acfg.async_publish)
+        publisher.publish(trainer.actor.params, start)
+        queue = ReplayQueue(acfg.queue_depth)
+        producer = ExperienceProducer(
+            trainer=trainer, key=key, start=start, steps=st.ppo_steps,
+            batches=self.blender.prompt_batches(st.ppo_batch,
+                                                st.ppo_steps, skip=start),
+            queue=queue, publisher=publisher, cfg=acfg,
+            rollout_hook=self.rollout_hook)
+        producer.start()
+        version, fallbacks = start, 0
+        try:
+            for i in range(start, st.ppo_steps):
+                if self.iter_hook is not None:
+                    self.iter_hook(i)
+                # mirror the sync PRNG carry (the producer holds the
+                # live generation chain) so checkpoints stay identical
+                key, _ = jax.random.split(key)
+                item = queue.get(timeout=acfg.get_timeout_s)
+                lag = version - item.rollout.version
+                exp, sm = trainer.score_rollout(
+                    item.rollout,
+                    behavior_params=publisher.train_params(
+                        item.rollout.version),
+                    policy_lag=lag)
+                gm = {**item.gen_metrics, **sm,
+                      "queue_depth": float(len(queue))}
+                ps = publisher.last_publish_stats
+                if ps:
+                    gm["publish_s"] = float(ps["seconds"])
+                    gm["publish_bytes"] = float(ps["bytes"])
+                ptx = None
+                if ptx_iter is not None:
+                    ptx = {k2: jnp.asarray(v)
+                           for k2, v in next(ptx_iter).items()}
+                tm = trainer.train_rlhf(exp, ptx)
+                version += 1
+                tripped = (acfg.is_ratio_abort is not None and lag > 0
+                           and sm["is_ratio_max"] > acfg.is_ratio_abort)
+                if tripped:
+                    # staleness guard: fall back to on-policy lockstep
+                    # for the rest of the run.  Flip the producer's gate
+                    # BEFORE publishing this version — otherwise the
+                    # producer could admit one more stale batch between
+                    # the publish and the flip.
+                    producer.force_lockstep()
+                    fallbacks += 1
+                    gm["lockstep_fallback"] = 1.0
+                if (tripped or version % acfg.publish_every == 0
+                        or producer.lockstep_active):
+                    publisher.publish(trainer.actor.params, version)
+                scores.append(gm["reward_score"])
+                self.log["stage3"].append({**gm, **tm})
+                if (self.ckpt is not None and self.save_every
+                        and ((i + 1) % self.save_every == 0
+                             or i == st.ppo_steps - 1)):
+                    self.timings["stage3"] = (elapsed
+                                              + time.perf_counter() - t0)
+                    self._save_ppo(trainer, key, i + 1)
+        finally:
+            producer.stop()
+            publisher.close()      # wakes a version-gated producer
+            queue.cancel()         # wakes a blocked put
+            producer.join(timeout=60.0)
+            self.async_stats = {
+                "queue": queue.stats(), "publisher": publisher.stats(),
+                "produced": producer.produced,
+                "lockstep_fallbacks": fallbacks,
+            }
+        if producer.error is not None:
+            raise RuntimeError("rollout producer failed") \
+                from producer.error
 
     # -------------------- checkpoint/resume seam ------------------- #
     # monotonic checkpoint step ids: stage boundaries, then one per

@@ -63,6 +63,11 @@ class PPOConfig:
     ptx_coef: float = 0.0          # mixture training weight (0 = off)
     ema_decay: float = 0.992
     use_ema: bool = True
+    # async (off-policy) staleness guard: clamp the per-token importance
+    # ratio against the tagged behavior policy into [1/is_clip, is_clip].
+    # None (the default) traces the identical on-policy loss graph, so
+    # sync runs are bitwise unaffected.
+    is_clip: Optional[float] = None
 
 
 # ===================================================================== #
@@ -78,6 +83,8 @@ def actor_loss_fn(cfg: ModelConfig, ppo: PPOConfig, params, exp: X.Experience,
                   ptx_batch=None):
     logp = actor_logprobs(cfg, params, exp.sequences)
     ratio = jnp.exp(logp - exp.logprobs)
+    if ppo.is_clip is not None:
+        ratio = jnp.clip(ratio, 1.0 / ppo.is_clip, ppo.is_clip)
     a = exp.advantages
     l1 = -a * ratio
     l2 = -a * jnp.clip(ratio, 1 - ppo.clip_eps, 1 + ppo.clip_eps)
@@ -151,13 +158,28 @@ def make_experience(actor_cfg: ModelConfig, critic_cfg: ModelConfig,
                         mask=mask), score
 
 
+def staleness_guard_stats(cfg: ModelConfig, params, sequences,
+                          behavior_logp, mask):
+    """Async-mode staleness telemetry: per-token importance ratio of the
+    CURRENT training policy against the tagged behavior policy (the one
+    that sampled the rollout).  Pure; jitted by the trainer and only
+    dispatched when ``policy_lag > 0`` — lockstep/sync graphs are
+    untouched."""
+    logp = actor_logprobs(cfg, params, sequences)
+    ratio = jnp.exp(logp - behavior_logp)
+    n = jnp.maximum(mask.sum(), 1.0)
+    return {"is_ratio_mean": (ratio * mask).sum() / n,
+            "is_ratio_max": jnp.max(jnp.where(mask > 0, ratio, 1.0))}
+
+
 # ===================================================================== #
 # Trainer
 # ===================================================================== #
 class PPOTrainer:
     def __init__(self, *, actor_cfg: ModelConfig, critic_cfg: ModelConfig,
                  actor_params, critic_params, ref_params, reward_params,
-                 ppo: PPOConfig, engine: Optional[HybridEngine] = None):
+                 ppo: PPOConfig, engine: Optional[HybridEngine] = None,
+                 rollout_mesh=None):
         self.actor_cfg, self.critic_cfg, self.ppo = actor_cfg, critic_cfg, ppo
         self.actor = TrainState.create(actor_params)
         self.critic = TrainState.create(critic_params)
@@ -199,9 +221,21 @@ class PPOTrainer:
                         chunk=ppo.decode_chunk, kv_layout=ppo.kv_layout,
                         block_size=ppo.kv_block_size,
                         prefix_cache=ppo.prefix_cache)
-        self.gen_engine = (engine.generation_engine(**gen_opts)
-                           if engine is not None
-                           else GenerationEngine(self.actor_cfg, **gen_opts))
+        # disaggregated mode: generation runs on its OWN mesh — the
+        # engine (and its KV layout) binds to the rollout devices, and
+        # params arrive there via the WeightPublisher instead of the
+        # per-iteration to_inference reshard
+        self.rollout_mesh = rollout_mesh
+        if rollout_mesh is not None:
+            rm = (rollout_mesh if int(np.prod(
+                list(rollout_mesh.shape.values()))) > 1 else None)
+            self.gen_engine = GenerationEngine(self.actor_cfg, mesh=rm,
+                                               **gen_opts)
+        else:
+            self.gen_engine = (engine.generation_engine(**gen_opts)
+                               if engine is not None
+                               else GenerationEngine(self.actor_cfg,
+                                                     **gen_opts))
         if self._multi:
             # jit the PPO step AGAINST the mesh: the state pins back to
             # the training layout every step (one compile across steps —
@@ -224,6 +258,8 @@ class PPOTrainer:
             self._actor_step = jax.jit(partial(actor_step, actor_cfg, ppo))
             self._critic_step = jax.jit(partial(critic_step, critic_cfg,
                                                 ppo))
+        # staleness telemetry (async mode, lag > 0 only)
+        self._guard = jax.jit(partial(staleness_guard_stats, actor_cfg))
 
     # -------------------------------------------------------------- #
     def _mesh_ctx(self):
@@ -255,6 +291,20 @@ class PPOTrainer:
         sequence's true length via the attention mask."""
         if isinstance(prompts, (list, tuple)):
             return self._experience_from_requests(list(prompts), key)
+        rollout, gm = self.generate_rollout(prompts, key)
+        exp, sm = self.score_rollout(rollout)
+        return exp, {**gm, **sm}
+
+    # ---------------- rollout / scoring split (async seam) --------- #
+    def generate_rollout(self, prompts, key, *, gen_params=None,
+                         version: int = 0):
+        """Generation phase only: decode a fixed-shape prompt batch into
+        a version-tagged :class:`~repro.core.replay.RolloutBatch`, no
+        scoring.  ``gen_params`` are params ALREADY in the generation
+        layout (the async WeightPublisher's push); when ``None`` the
+        sync reshard path runs (``to_inference`` on the hybrid engine,
+        or a cross-mesh put when a rollout mesh is configured)."""
+        from repro.core.replay import RolloutBatch
         t0 = time.perf_counter()
         if self.ppo.n_samples_per_prompt > 1:
             # best-of-n on the fixed-shape path: tile each prompt row n
@@ -263,26 +313,91 @@ class PPOTrainer:
             # reuses each prompt's prefill via the prefix cache)
             prompts = jnp.repeat(jnp.asarray(prompts),
                                  self.ppo.n_samples_per_prompt, axis=0)
-        params = self.actor.params
-        if self.engine is not None:
-            params = self.engine.to_inference(params)
+        params = gen_params
+        if params is None:
+            params = self.actor.params
+            if self.rollout_mesh is not None:
+                from repro.sharding.strategy import cross_mesh_put
+                params = cross_mesh_put(params, self.publish_shardings())
+            elif self.engine is not None:
+                params = self.engine.to_inference(params)
         out = self.gen_engine.generate(params, prompts, key)
         jax.block_until_ready(out["sequences"])
         gen_s = time.perf_counter() - t0
         n_gen = float(out["response_mask"].sum())
-        seqs, mask = self._shard_batch((out["sequences"],
-                                        out["response_mask"]))
-        with self._mesh_ctx():
-            exp, score = self._mk_exp(self.actor.params, self.ref_params,
-                                      self.critic.params,
-                                      self.reward_params, seqs, mask)
-        gm = {"reward_score": float(score.mean()),
-              "gen_len": float(out["response_mask"].sum(1).mean()),
+        gm = {"gen_len": float(out["response_mask"].sum(1).mean()),
               "gen_tok_s": n_gen / max(gen_s, 1e-9),
               "decode_steps": float(
                   self.gen_engine.last_stats["decode_steps"])}
-        self._add_reshard_metrics(gm)
-        return exp, gm
+        if gen_params is None:
+            self._add_reshard_metrics(gm)
+        return RolloutBatch(sequences=out["sequences"],
+                            response_mask=out["response_mask"],
+                            attn_mask=None, version=version), gm
+
+    def score_rollout(self, rollout, *, behavior_params=None,
+                      policy_lag: Optional[int] = None):
+        """Scoring phase: behavior logprobs, ref logprobs, values,
+        reward, KL-shaped rewards, GAE — the same jitted graph for sync
+        and async, which is what keeps lockstep bit-identical.
+
+        ``behavior_params`` is the policy that actually SAMPLED the
+        rollout (the publisher's retained train-layout tree for the
+        rollout's version tag); defaulting to the current actor is the
+        on-policy/sync case.  Scoring with the behavior weights makes
+        ``exp.logprobs`` the exact sampling-time logprobs, so the PPO
+        importance ratio is exact — recomputing from a since-updated
+        actor would silently report ratio == 1 and hide staleness.
+
+        ``policy_lag`` (consumer version minus rollout version), when
+        given, emits the staleness-guard metrics ``policy_lag`` /
+        ``is_ratio_mean`` / ``is_ratio_max``; the guard forward runs
+        only when lag > 0."""
+        behavior = (behavior_params if behavior_params is not None
+                    else self.actor.params)
+        if rollout.attn_mask is None:
+            seqs, mask = self._shard_batch(
+                (jnp.asarray(rollout.sequences),
+                 jnp.asarray(rollout.response_mask)))
+            extra = ()
+        else:
+            seqs, mask, attn = self._shard_batch(
+                (jnp.asarray(rollout.sequences),
+                 jnp.asarray(rollout.response_mask),
+                 jnp.asarray(rollout.attn_mask)))
+            extra = (attn,)
+        with self._mesh_ctx():
+            exp, score = self._mk_exp(behavior, self.ref_params,
+                                      self.critic.params,
+                                      self.reward_params, seqs, mask,
+                                      *extra)
+        sm = {"reward_score": float(score.mean())}
+        if policy_lag is not None:
+            sm["policy_lag"] = float(policy_lag)
+            if policy_lag > 0:
+                with self._mesh_ctx():
+                    g = self._guard(self.actor.params, exp.sequences,
+                                    exp.logprobs, exp.mask)
+                sm["is_ratio_mean"] = float(g["is_ratio_mean"])
+                sm["is_ratio_max"] = float(g["is_ratio_max"])
+            else:
+                # on-policy: the ratio is identically 1 by construction
+                sm["is_ratio_mean"] = 1.0
+                sm["is_ratio_max"] = 1.0
+        return exp, sm
+
+    def publish_shardings(self):
+        """Target layout for async weight publication: the rollout
+        mesh's inference (TP) layout when one is configured, the hybrid
+        engine's inference layout on a shared multi-device mesh, or
+        ``None`` (zero-copy reference sharing) single-device."""
+        if self.rollout_mesh is not None:
+            from repro.sharding import strategy as S
+            return S.param_shardings(self.actor_cfg, self.rollout_mesh,
+                                     "tp")
+        if self._multi:
+            return self.engine.infer_shardings
+        return None
 
     def _expand_samples(self, requests):
         """Best-of-n expansion: replicate each request
@@ -335,17 +450,14 @@ class PPOTrainer:
             seqs[i, Lp:Lp + n] = c.tokens
             resp[i, Lp:Lp + n] = True
             attn[i, :Lp + n] = 1.0
-        sequences = jnp.asarray(seqs)
+        from repro.core.replay import RolloutBatch
         response_mask = jnp.asarray(resp)
         n_gen = float(response_mask.sum())
-        sequences, resp_m, attn_m = self._shard_batch(
-            (sequences, response_mask, jnp.asarray(attn)))
-        with self._mesh_ctx():
-            exp, score = self._mk_exp(self.actor.params, self.ref_params,
-                                      self.critic.params,
-                                      self.reward_params, sequences,
-                                      resp_m, attn_m)
-        gm = {"reward_score": float(score.mean()),
+        rollout = RolloutBatch(sequences=jnp.asarray(seqs),
+                               response_mask=response_mask,
+                               attn_mask=jnp.asarray(attn))
+        exp, sm = self.score_rollout(rollout)
+        gm = {**sm,
               "gen_len": float(response_mask.sum(1).mean()),
               "gen_tok_s": n_gen / max(gen_s, 1e-9),
               "decode_steps": float(eng.last_stats["decode_steps"])}

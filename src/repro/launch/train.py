@@ -22,6 +22,21 @@ mesh: the batch shards over ``data``, params follow ``--strategy``
 (ZeRO-1) even when params are replicated.  Run locally with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to simulate the
 mesh on CPU (see docs/scaling.md).
+
+``--rlhf`` runs the full 3-stage pipeline (SFT -> RM -> PPO) instead of
+the LM loop.  Stage 3 can be disaggregated and overlapped
+(docs/async_rlhf.md)::
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --reduced --rlhf --async-rlhf --rollout-mesh 6 --train-mesh 2 \
+        [--queue-depth 2] [--publish-every 1] [--max-lag 1] \
+        [--is-ratio-abort R]
+
+``--rollout-mesh``/``--train-mesh`` carve the host's devices into a
+dedicated generation mesh and a disjoint training mesh (each flag takes
+a device count or an explicit ``dp,tp``); ``--async-rlhf`` runs the
+replay-queue producer/consumer loop (``--max-lag 0`` = lockstep,
+bit-identical to the sync pipeline).
 """
 from __future__ import annotations
 
@@ -35,11 +50,70 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.core import lora as LoRA
 from repro.data import CopyTaskDataset, DataBlender, SortTaskDataset
-from repro.launch.mesh import make_local_mesh, mesh_from_spec
+from repro.launch.mesh import (make_disaggregated_meshes, make_local_mesh,
+                               mesh_from_spec)
 from repro.models import transformer as T
 from repro.training import checkpoint, schedules
 from repro.training.steps import lm_train_step
 from repro.training.train_state import TrainState
+
+
+def run_rlhf(args, cfg):
+    """3-stage RLHF on the reduced config; stage 3 optionally
+    disaggregated (``--rollout-mesh``/``--train-mesh``) and overlapped
+    (``--async-rlhf``) — see docs/async_rlhf.md."""
+    from repro.core import (AsyncConfig, PPOConfig, RLHFEngine,
+                            RLHFPipeline, StageConfig)
+    mesh = rollout_mesh = None
+    if args.rollout_mesh or args.train_mesh:
+        if not (args.rollout_mesh and args.train_mesh):
+            raise SystemExit("--rollout-mesh and --train-mesh go together")
+        rollout_mesh, mesh = make_disaggregated_meshes(
+            rollout=args.rollout_mesh, train=args.train_mesh)
+        print(f"disaggregated: rollout={dict(rollout_mesh.shape)} "
+              f"train={dict(mesh.shape)}")
+    elif args.mesh:
+        mesh = mesh_from_spec(args.mesh)
+        print(f"mesh={dict(mesh.shape)}")
+    async_cfg = None
+    if args.async_rlhf:
+        async_cfg = AsyncConfig(queue_depth=args.queue_depth,
+                                publish_every=args.publish_every,
+                                max_lag=args.max_lag,
+                                is_ratio_abort=args.is_ratio_abort)
+        print(f"async stage 3: {async_cfg}")
+
+    half = args.seq // 2
+    V = min(cfg.vocab_size, 256)
+    ds = [CopyTaskDataset(10_000, half, args.seq - half, V, seed=1),
+          SortTaskDataset(10_000, half, args.seq - half, V, seed=2)]
+    eng = RLHFEngine(cfg, cfg.replace(name=cfg.name + "-critic"),
+                     jax.random.PRNGKey(args.seed), mesh=mesh,
+                     rollout_mesh=rollout_mesh)
+    mgr = (checkpoint.CheckpointManager(args.ckpt_dir)
+           if args.ckpt_dir else None)
+    pipe = RLHFPipeline(
+        eng, DataBlender(ds, seed=args.seed),
+        StageConfig(sft_steps=args.steps, sft_batch=args.batch,
+                    rm_steps=args.steps, rm_batch=args.batch,
+                    ppo_steps=args.steps, ppo_batch=args.batch,
+                    seed=args.seed),
+        PPOConfig(max_new_tokens=args.max_new, temperature=1.0),
+        checkpointer=mgr, save_every=args.save_every or 1,
+        async_cfg=async_cfg)
+    out = pipe.run()
+    t = out["timings"]
+    print(f"sft_loss={out['sft_loss'][-1]:.4f}  "
+          f"rm_acc={np.mean(out['rm_acc']):.2f}  "
+          f"reward={out['ppo_scores'][-1]:.4f}")
+    print("  ".join(f"{k}={v:.1f}s" for k, v in t.items())
+          + f"  gen={pipe.gen_tok_s:.1f}tok/s")
+    if pipe.async_stats:
+        q = pipe.async_stats["queue"]
+        print(f"async: produced={pipe.async_stats['produced']} "
+              f"max_depth={q['max_depth']} dropped={q['dropped']} "
+              f"fallbacks={pipe.async_stats['lockstep_fallbacks']} "
+              f"publishes={pipe.async_stats['publisher']['publishes']}")
 
 
 def main():
@@ -73,11 +147,37 @@ def main():
     ap.add_argument("--zero", type=int, default=1, choices=[0, 1],
                     help="ZeRO stage for the Adam moments on the mesh: "
                          "1 shards them over the data axes")
+    ap.add_argument("--rlhf", action="store_true",
+                    help="run the 3-stage RLHF pipeline instead of the "
+                         "LM loop (--steps/--batch size every stage)")
+    ap.add_argument("--async-rlhf", action="store_true",
+                    help="overlap stage-3 generation and training via "
+                         "the replay queue (docs/async_rlhf.md)")
+    ap.add_argument("--rollout-mesh", default=None,
+                    help="devices for the dedicated generation mesh: a "
+                         "count (TP) or an explicit 'dp,tp'")
+    ap.add_argument("--train-mesh", default=None,
+                    help="devices for the disjoint training mesh: a "
+                         "count (DP) or an explicit 'dp,tp'")
+    ap.add_argument("--queue-depth", type=int, default=2,
+                    help="replay queue capacity (backpressure bound)")
+    ap.add_argument("--publish-every", type=int, default=1,
+                    help="publish actor weights every N PPO steps")
+    ap.add_argument("--max-lag", type=int, default=1,
+                    help="max behavior-policy staleness in PPO steps "
+                         "(0 = lockstep, bit-identical to sync)")
+    ap.add_argument("--is-ratio-abort", type=float, default=None,
+                    help="importance-ratio ceiling: a stale batch whose "
+                         "max ratio exceeds it drops the run to lockstep")
+    ap.add_argument("--max-new", type=int, default=16,
+                    help="PPO generation budget per prompt (--rlhf)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    if args.rlhf:
+        return run_rlhf(args, cfg)
     mesh = None
     if args.mesh:
         if args.lora:

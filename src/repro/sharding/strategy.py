@@ -172,6 +172,23 @@ def shardings_for_tree(specs, mesh: Mesh, strategy: str, *, opt=False):
         pspecs_for_tree(specs, mesh, strategy, opt=opt))
 
 
+def cross_mesh_put(tree, shardings):
+    """Place ``tree`` onto ``shardings`` that may live on a DIFFERENT
+    (disjoint) device set than the inputs — the disaggregated weight
+    push from the training mesh to the rollout mesh.  ``shardings=None``
+    is the single-device zero-copy case.  jax's ``device_put`` handles
+    the cross-mesh transfer directly on every backend we target; if a
+    backend refuses (committed-array placement rules vary by version),
+    fall back to a host roundtrip — slower, never wrong."""
+    if shardings is None:
+        return tree
+    try:
+        return jax.device_put(tree, shardings)
+    except Exception:
+        host = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+        return jax.device_put(host, shardings)
+
+
 def shard_batch(tree, mesh: Mesh):
     """Commit a batch pytree's leading dim to the data axes (replicated
     when the batch doesn't divide them).  THE one copy of the placement

@@ -1,0 +1,151 @@
+"""Subprocess driver for the async-RLHF soak/preemption suite.
+
+Runs the tiny 3-stage RLHF pipeline with stage 3 in one of three modes
+(``--mode sync | lockstep | stale``) and writes a JSON record of
+everything that must be bit-identical across modes and across
+crash/resume:
+
+- the deterministic per-iteration stage-3 metrics (wall-time and
+  queue/staleness telemetry dropped — wall time legitimately differs
+  between runs, and async-only keys differ between MODES by design),
+- the PPO reward-score trajectory,
+- SHA-256 of the final actor / critic / EMA state,
+- the replay-queue and publisher stats (for backpressure assertions).
+
+Soak injection (producer/consumer thread stress):
+
+- ``--slow-consumer-iters A:B`` sleeps ``--slow-ms`` at the top of PPO
+  iterations [A, B) on the CONSUMER thread — the free-running producer
+  outruns it and must hit queue backpressure, not unbounded growth;
+- ``--slow-producer-iters A:B`` sleeps on the PRODUCER thread before
+  generating those batches — the consumer blocks on an empty queue;
+- ``--die-at-iter K`` exits hard (code 37) at the top of PPO iteration
+  K after draining the in-flight checkpoint write (the preemption
+  grace window), mirroring tests/_ckpt_driver.py.
+
+The harness in tests/test_async_soak.py launches this file via
+``sys.executable``; it is NOT a pytest module.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import (AsyncConfig, PPOConfig, RLHFEngine,  # noqa: E402
+                        RLHFPipeline, StageConfig)
+from repro.data import (ConstantTaskDataset, CopyTaskDataset,  # noqa: E402
+                        DataBlender)
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.training.checkpoint import CheckpointManager  # noqa: E402
+
+DIE_EXIT_CODE = 37
+V = 64
+ACTOR = ModelConfig(name="a", arch_type="dense", n_layers=1, d_model=32,
+                    n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=V,
+                    compute_dtype="float32", remat=False)
+CRITIC = ACTOR.replace(name="c")
+# wall-time telemetry + async-only staleness/queue keys: excluded from
+# the cross-mode / cross-resume bit-identity record
+NONDETERMINISTIC = ("gen_tok_s", "reshard_s", "reshard_bytes",
+                    "publish_s", "publish_bytes", "queue_depth",
+                    "policy_lag", "is_ratio_mean", "is_ratio_max",
+                    "lockstep_fallback")
+
+def _async_cfg(args):
+    if args.mode == "sync":
+        return None
+    if args.mode == "lockstep":
+        return AsyncConfig.lockstep()
+    return AsyncConfig(queue_depth=args.queue_depth, publish_every=1,
+                       max_lag=args.max_lag)
+
+
+def tree_sha(tree) -> str:
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(tree):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def _span(spec):
+    if not spec:
+        return None
+    a, b = spec.split(":")
+    return int(a), int(b)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("sync", "lockstep", "stale"),
+                    default="lockstep")
+    ap.add_argument("--queue-depth", type=int, default=2)
+    ap.add_argument("--max-lag", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--ppo-steps", type=int, default=4)
+    ap.add_argument("--save-every", type=int, default=1)
+    ap.add_argument("--die-at-iter", type=int, default=None)
+    ap.add_argument("--slow-consumer-iters", default=None)
+    ap.add_argument("--slow-producer-iters", default=None)
+    ap.add_argument("--slow-ms", type=int, default=150)
+    args = ap.parse_args()
+
+    ds = [ConstantTaskDataset(200, 6, 6, V, seed=1),
+          CopyTaskDataset(200, 6, 6, V, seed=2)]
+    bl = DataBlender(ds, [0.7, 0.3], seed=0)
+    eng = RLHFEngine(ACTOR, CRITIC, jax.random.PRNGKey(0))
+    ckpt = (CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None)
+    pipe = RLHFPipeline(
+        eng, bl,
+        StageConfig(sft_steps=2, sft_batch=4, rm_steps=2, rm_batch=4,
+                    ppo_steps=args.ppo_steps, ppo_batch=4, seed=0),
+        PPOConfig(max_new_tokens=4, temperature=1.0),
+        checkpointer=ckpt, save_every=args.save_every,
+        async_cfg=_async_cfg(args))
+
+    slow_c = _span(args.slow_consumer_iters)
+    slow_p = _span(args.slow_producer_iters)
+    dt = args.slow_ms / 1000.0
+
+    def consumer_hook(i):
+        if slow_c and slow_c[0] <= i < slow_c[1]:
+            time.sleep(dt)
+        if args.die_at_iter is not None and i == args.die_at_iter:
+            if ckpt is not None:        # preemption grace window:
+                ckpt.wait_for_save()    # drain the in-flight write,
+            os._exit(DIE_EXIT_CODE)     # then die hard (no atexit)
+
+    pipe.iter_hook = consumer_hook
+    if slow_p:
+        def producer_hook(i):
+            if slow_p[0] <= i < slow_p[1]:
+                time.sleep(dt)
+        pipe.rollout_hook = producer_hook
+
+    out = pipe.run()
+    record = {
+        "mode": args.mode,
+        "scores": out["ppo_scores"],
+        "stage3": [{k: v for k, v in m.items()
+                    if k not in NONDETERMINISTIC}
+                   for m in pipe.log["stage3"]],
+        "actor_sha": tree_sha(pipe.trainer.actor),
+        "ema_sha": tree_sha(pipe.trainer.ema),
+        "critic_sha": tree_sha(pipe.trainer.critic),
+        "async_stats": pipe.async_stats,
+    }
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,5 @@
 import os
+import signal
 
 # Tests run on the single real CPU device; ONLY the dry-run process forces
 # 512 placeholder devices (see src/repro/launch/dryrun.py), and the
@@ -12,6 +13,11 @@ import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
 
+# watchdog for the producer/consumer suites: a deadlocked replay queue
+# must fail the test fast, not hang the CI job (pytest-timeout is not in
+# the image, so this is a harness-level SIGALRM guard)
+ASYNC_RLHF_TIMEOUT_S = int(os.environ.get("ASYNC_RLHF_TIMEOUT_S", "900"))
+
 
 def pytest_configure(config):
     config.addinivalue_line(
@@ -19,6 +25,12 @@ def pytest_configure(config):
         "multidevice: needs >= 4 simulated devices "
         "(XLA_FLAGS=--xla_force_host_platform_device_count=8); "
         "skipped in the single-device tier-1 run")
+    config.addinivalue_line(
+        "markers",
+        "async_rlhf: disaggregated async-RLHF suite (replay queue, "
+        "producer/consumer threads); runs under a SIGALRM watchdog of "
+        f"{ASYNC_RLHF_TIMEOUT_S}s so a deadlock fails fast "
+        "(override with ASYNC_RLHF_TIMEOUT_S)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -30,3 +42,24 @@ def pytest_collection_modifyitems(config, items):
     for item in items:
         if "multidevice" in item.keywords:
             item.add_marker(skip)
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    if ("async_rlhf" not in item.keywords
+            or not hasattr(signal, "SIGALRM")):
+        yield
+        return
+
+    def _watchdog(signum, frame):
+        raise TimeoutError(
+            f"async_rlhf watchdog: {item.nodeid} exceeded "
+            f"{ASYNC_RLHF_TIMEOUT_S}s — deadlocked queue/producer?")
+
+    old = signal.signal(signal.SIGALRM, _watchdog)
+    signal.alarm(ASYNC_RLHF_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)

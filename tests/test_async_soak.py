@@ -1,0 +1,158 @@
+"""Async-RLHF soak + preemption acceptance (subprocess harness).
+
+Drives ``tests/_async_driver.py`` — the tiny 3-stage pipeline with
+stage 3 in ``sync`` / ``lockstep`` / ``stale`` mode — through the
+stress scenarios the in-process tests can't reach:
+
+- **backpressure soak**: a slow-consumer phase lets the free-running
+  producer outrun PPO; the replay queue must block producers at
+  capacity (bounded ``max_depth``, nonzero ``put_wait_s``) instead of
+  growing, and still deliver every batch exactly once;
+- **starvation soak**: a slow-producer phase starves the consumer; the
+  run must simply wait (nonzero ``get_wait_s``) and finish clean;
+- **preemption**: hard-kill (exit 37) a checkpointed LOCKSTEP async run
+  at the top of a PPO iteration, then resume the surviving PR-6
+  checkpoint in EITHER mode — plain sync or lockstep async — and get a
+  run bit-identical to the uninterrupted sync reference (metrics
+  stream, reward trajectory, actor/critic/EMA SHA-256).
+
+Bit-identity is only claimed for lockstep (``max_lag=0``): with real
+staleness the behavior policy of batch ``i`` depends on producer/
+consumer thread timing, so the ``stale`` legs assert liveness and
+conservation, not equality.
+"""
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.async_rlhf
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(TESTS_DIR)
+DRIVER = os.path.join(TESTS_DIR, "_async_driver.py")
+DIE_EXIT_CODE = 37
+
+
+def run_driver(*args, check=True):
+    env = dict(os.environ,
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(REPO_ROOT, "src")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)      # subprocess runs single-device
+    env.pop("REPRO_CKPT_FAULT", None)
+    proc = subprocess.run([sys.executable, DRIVER, *map(str, args)],
+                          env=env, cwd=REPO_ROOT, capture_output=True,
+                          text=True, timeout=600)
+    if check and proc.returncode != 0:
+        raise AssertionError(
+            f"driver exited {proc.returncode}\n--- stdout ---\n"
+            f"{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    return proc
+
+
+def run_record(tmp, name, *args, **kw):
+    out = tmp / f"{name}.json"
+    run_driver("--out", out, *args, **kw)
+    with open(out) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def sync_ref(tmp_path_factory):
+    """Uninterrupted plain-sync reference (no queue, no checkpoints)."""
+    tmp = tmp_path_factory.mktemp("async_soak_ref")
+    return run_record(tmp, "sync_ref", "--mode", "sync")
+
+
+def assert_bit_identical(ref: dict, got: dict):
+    assert got["scores"] == ref["scores"]
+    assert len(got["stage3"]) == len(ref["stage3"])
+    for i, (a, b) in enumerate(zip(ref["stage3"], got["stage3"])):
+        assert a == b, f"iteration {i} metrics diverge: {a} vs {b}"
+    for k in ("actor_sha", "critic_sha", "ema_sha"):
+        assert got[k] == ref[k], f"{k} differs"
+
+
+# ===================================================================== #
+# soak: injected slow phases must produce backpressure, not growth
+# ===================================================================== #
+def test_soak_slow_consumer_backpressures(tmp_path):
+    """Producer free-runs 1 step ahead while the consumer crawls
+    through iterations [1, 4): the queue must clamp at capacity and
+    make the producer WAIT (put_wait_s > 0), never drop or duplicate —
+    the "bounded, not unbounded growth" half of the soak gate."""
+    # queue_depth=1 < max_lag+1: the version gate admits one batch
+    # beyond the queued one, so the producer genuinely blocks in put()
+    rec = run_record(tmp_path, "slowc", "--mode", "stale",
+                     "--ppo-steps", 6, "--queue-depth", 1,
+                     "--slow-consumer-iters", "1:4", "--slow-ms", 300)
+    q = rec["async_stats"]["queue"]
+    assert q["puts"] == q["gets"] == rec["async_stats"]["produced"] == 6
+    assert q["dropped"] == 0
+    assert q["max_depth"] <= q["capacity"] == 1
+    assert q["put_wait_s"] > 0.0          # backpressure actually engaged
+    assert len(rec["scores"]) == 6        # every batch trained exactly once
+
+
+def test_soak_slow_producer_starves_consumer_cleanly(tmp_path):
+    """The inverse phase: a crawling producer (iterations [2, 5)) must
+    simply starve the consumer (get_wait_s > 0) — no deadlock, no lost
+    work, clean drain at the end."""
+    rec = run_record(tmp_path, "slowp", "--mode", "stale",
+                     "--ppo-steps", 6,
+                     "--slow-producer-iters", "2:5", "--slow-ms", 300)
+    q = rec["async_stats"]["queue"]
+    assert q["puts"] == q["gets"] == 6 and q["dropped"] == 0
+    assert q["get_wait_s"] > 0.0          # consumer really waited
+    assert len(rec["scores"]) == 6
+
+
+def test_soak_lockstep_with_slow_phases_stays_bit_identical(sync_ref,
+                                                            tmp_path):
+    """Timing jitter must never leak into lockstep numerics: the same
+    slow-consumer + slow-producer phases under ``max_lag=0`` still
+    reproduce the sync run bit-for-bit."""
+    rec = run_record(tmp_path, "slowlock", "--mode", "lockstep",
+                     "--slow-consumer-iters", "1:2",
+                     "--slow-producer-iters", "2:3", "--slow-ms", 200)
+    assert_bit_identical(sync_ref, rec)
+
+
+# ===================================================================== #
+# preemption: a PR-6 checkpoint mid-async-run resumes in EITHER mode
+# ===================================================================== #
+@pytest.fixture(scope="module")
+def crashed_ckpt(tmp_path_factory):
+    """One checkpointed lockstep-async run hard-killed at the top of
+    PPO iteration 2 (of 4).  Yields the surviving checkpoint dir."""
+    tmp = tmp_path_factory.mktemp("async_crash")
+    ckpt, out = tmp / "ckpt", tmp / "dead.json"
+    proc = run_driver("--mode", "lockstep", "--ckpt-dir", ckpt,
+                      "--out", out, "--die-at-iter", 2, check=False)
+    assert proc.returncode == DIE_EXIT_CODE, proc.stderr
+    assert not out.exists()               # died before finishing
+    from repro.training.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(ckpt))
+    latest = mgr.latest_step()
+    assert latest == 4                    # sft=1, rm=2, ppo iters 0+1
+    mgr.verify(latest)
+    assert mgr.restore_metadata(latest)["ppo_iter"] == 2
+    return ckpt
+
+
+@pytest.mark.parametrize("resume_mode", ["sync", "lockstep"])
+def test_preempted_async_run_resumes_bit_identical(sync_ref, crashed_ckpt,
+                                                   tmp_path, resume_mode):
+    """The checkpoint written mid-async-run is mode-agnostic: resuming
+    it under plain sync OR lockstep async completes the exact
+    uninterrupted-sync trajectory."""
+    ckpt = tmp_path / "ckpt"
+    shutil.copytree(crashed_ckpt, ckpt)   # each leg resumes the original
+    out = tmp_path / "resumed.json"
+    run_driver("--mode", resume_mode, "--ckpt-dir", ckpt, "--out", out)
+    with open(out) as f:
+        assert_bit_identical(sync_ref, json.load(f))

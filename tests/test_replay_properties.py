@@ -1,0 +1,197 @@
+"""Property tests for the replay queue (async RLHF transport).
+
+Mirrors the invariant style of test_block_pool_properties.py via the
+optional-hypothesis shim: a model-based single-thread leg drives
+arbitrary produce/consume/close/cancel interleavings against a
+reference model, and threaded legs check the same invariants under real
+concurrency.  The invariants:
+
+- FIFO: items come out in put order;
+- bounded: depth never exceeds capacity (backpressure, not growth);
+- conservation: every put is eventually got, dropped (cancel), or still
+  queued — never lost, never duplicated;
+- liveness: close drains cleanly, cancel wakes every waiter, and no
+  blocking op can hang (each takes a timeout; the module-level
+  ``async_rlhf`` watchdog backstops the suite).
+"""
+import threading
+from collections import Counter, deque
+
+import pytest
+
+from _hyp import given, settings, st
+from repro.core.replay import ReplayClosed, ReplayQueue, ReplayTimeout
+
+pytestmark = pytest.mark.async_rlhf
+
+
+# ===================================================================== #
+# model-based interleavings (deterministic, no threads)
+# ===================================================================== #
+def _check(q: ReplayQueue, model: deque, got: list, put_log: list,
+           dropped: int):
+    s = q.stats()
+    assert len(q) == len(model) <= q.capacity
+    assert s["depth"] == len(model)
+    assert s["max_depth"] <= q.capacity
+    assert got == put_log[:len(got)]                   # FIFO, no dup
+    assert s["puts"] == len(put_log)
+    assert s["gets"] == len(got)
+    assert s["dropped"] == dropped
+    assert s["puts"] == s["gets"] + s["dropped"] + s["depth"]
+
+
+def _run_ops(seed: int, n_ops: int, capacity: int) -> Counter:
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    q = ReplayQueue(capacity)
+    model: deque = deque()
+    got, put_log = [], []
+    dropped = 0
+    next_item = 0
+    ops = Counter()
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.45:                                   # put
+            ops["put"] += 1
+            if q.cancelled or q.closed:
+                with pytest.raises(ReplayClosed):
+                    q.put(next_item, timeout=0)
+            elif len(model) >= capacity:
+                ops["put_full"] += 1
+                with pytest.raises(ReplayTimeout):
+                    q.put(next_item, timeout=0)        # backpressure
+            else:
+                q.put(next_item, timeout=0)
+                model.append(next_item)
+                put_log.append(next_item)
+                next_item += 1
+        elif r < 0.90:                                 # get
+            ops["get"] += 1
+            if q.cancelled:
+                with pytest.raises(ReplayClosed):
+                    q.get(timeout=0)
+            elif model:
+                assert q.get(timeout=0) == model.popleft()
+                got.append(put_log[len(got)])
+            elif q.closed:
+                ops["get_drained"] += 1
+                with pytest.raises(ReplayClosed):
+                    q.get(timeout=0)
+            else:
+                ops["get_empty"] += 1
+                with pytest.raises(ReplayTimeout):
+                    q.get(timeout=0)
+        elif r < 0.95:                                 # close (drains)
+            ops["close"] += 1
+            q.close()
+        else:                                          # cancel (drops)
+            ops["cancel"] += 1
+            if not q.cancelled:
+                dropped += len(model)
+                model.clear()
+            q.cancel()
+        _check(q, model, got, put_log, dropped)
+    return ops
+
+
+@given(st.integers(0, 10_000), st.integers(1, 6))
+@settings(max_examples=40, deadline=None)
+def test_arbitrary_interleavings_hold_invariants(seed, capacity):
+    ops = _run_ops(seed, 120, capacity)
+    # the walk must actually exercise the interesting paths
+    assert ops["put"] and ops["get"]
+
+
+def test_interleavings_cover_all_transitions():
+    total = Counter()
+    for seed in range(25):
+        total += _run_ops(seed, 160, 2)
+    for op in ("put", "put_full", "get", "get_empty", "get_drained",
+               "close", "cancel"):
+        assert total[op] > 0, f"op {op} never exercised"
+
+
+# ===================================================================== #
+# real threads: conservation + FIFO + bounded depth under concurrency
+# ===================================================================== #
+def _producer(q, n, delays):
+    try:
+        for i in range(n):
+            if delays is not None and delays[i % len(delays)]:
+                threading.Event().wait(delays[i % len(delays)])
+            q.put(i, timeout=30.0)
+        q.close()
+    except ReplayClosed:
+        pass
+
+
+@given(st.integers(1, 4), st.integers(5, 40))
+@settings(max_examples=10, deadline=None)
+def test_threaded_pipe_never_drops_or_duplicates(capacity, n):
+    q = ReplayQueue(capacity)
+    t = threading.Thread(target=_producer, args=(q, n, None), daemon=True)
+    t.start()
+    got = []
+    while True:
+        try:
+            got.append(q.get(timeout=30.0))
+        except ReplayClosed:
+            break
+    t.join(timeout=30.0)
+    assert not t.is_alive()
+    assert got == list(range(n))                       # FIFO, exact
+    s = q.stats()
+    assert s["max_depth"] <= capacity
+    assert s["puts"] == s["gets"] == n and s["dropped"] == 0
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_threaded_cancel_wakes_producer_and_conserves(seed):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    n, take = 30, int(rng.integers(0, 10))
+    q = ReplayQueue(1)                 # tight bound: producer WILL block
+    t = threading.Thread(target=_producer, args=(q, n, None), daemon=True)
+    t.start()
+    got = [q.get(timeout=30.0) for _ in range(take)]
+    q.cancel()
+    t.join(timeout=30.0)               # a blocked put must be woken
+    assert not t.is_alive()
+    assert got == list(range(take))
+    s = q.stats()
+    assert s["gets"] + s["dropped"] <= s["puts"] <= n
+    assert len(q) == 0                 # cancel leaves nothing behind
+
+
+def test_close_then_drain_is_clean_shutdown():
+    q = ReplayQueue(4)
+    for i in range(3):
+        q.put(i, timeout=1.0)
+    q.close()
+    with pytest.raises(ReplayClosed):
+        q.put(99, timeout=0)
+    assert [q.get(timeout=1.0) for _ in range(3)] == [0, 1, 2]
+    with pytest.raises(ReplayClosed):
+        q.get(timeout=1.0)             # drained: immediate, not timeout
+    s = q.stats()
+    assert s["puts"] == s["gets"] == 3 and s["dropped"] == 0
+
+
+def test_blocked_get_wakes_on_close():
+    q = ReplayQueue(2)
+    woke = {}
+
+    def consumer():
+        try:
+            q.get(timeout=30.0)
+        except ReplayClosed:
+            woke["yes"] = True
+
+    t = threading.Thread(target=consumer, daemon=True)
+    t.start()
+    threading.Event().wait(0.05)       # let the consumer block
+    q.close()
+    t.join(timeout=10.0)
+    assert not t.is_alive() and woke.get("yes")
