@@ -135,9 +135,13 @@ class HybridEngine:
     # ---------------------------------------------------------------- #
     # generation engine (the serving-grade experience-generation path)
     # ---------------------------------------------------------------- #
-    def generation_engine(self, **gen_kwargs):
+    def generation_engine(self, cfg=None, **gen_kwargs):
         """Build a :class:`repro.serving.engine.GenerationEngine` for this
-        actor.  The engine expects params already in the inference layout:
+        actor.  ``cfg`` overrides the engine's model config — the PPO
+        trainer uses it to flip generation-only cache options
+        (``kv_quant``) without touching the training-side config; it
+        must describe the same parameters (same specs/shapes).
+        The engine expects params already in the inference layout:
         call :meth:`to_inference` once per phase and pass the result to
         ``engine.generate`` / ``engine.serve`` / ``engine.core`` — that
         pairing is the Hybrid Engine contract (one reshard, then a
@@ -155,7 +159,8 @@ class HybridEngine:
         from repro.serving.engine import GenerationEngine
         mesh = self.mesh if np.prod(
             list(self.mesh.shape.values())) > 1 else None
-        return GenerationEngine(self.cfg, mesh=mesh, **gen_kwargs)
+        return GenerationEngine(cfg if cfg is not None else self.cfg,
+                                mesh=mesh, **gen_kwargs)
 
     # ---------------------------------------------------------------- #
     # analytics (feed benchmarks/phase_breakdown + effective_throughput)

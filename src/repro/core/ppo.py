@@ -52,6 +52,10 @@ class PPOConfig:
     kv_layout: str = "dense"       # generation engine KV layout
     kv_block_size: int = 16        # paged: tokens per KV block
     prefix_cache: bool = False     # paged: prefix-aware block reuse
+    # int8 KV cache for experience generation (both layouts): ~3.5x more
+    # cached tokens per KV byte at a bounded logit-error budget — only
+    # the generation engine's cfg flips, training forwards are untouched
+    kv_quant: bool = False
     kl_coef: float = 0.1
     clip_eps: float = 0.2
     value_clip: float = 0.2
@@ -221,6 +225,11 @@ class PPOTrainer:
                         chunk=ppo.decode_chunk, kv_layout=ppo.kv_layout,
                         block_size=ppo.kv_block_size,
                         prefix_cache=ppo.prefix_cache)
+        # int8-KV experience generation: only the engine's view of the
+        # model flips (cache dtypes + scale planes) — the actor params
+        # it consumes and every training-side forward are unchanged
+        gen_cfg = (self.actor_cfg.replace(kv_quant=True)
+                   if ppo.kv_quant else self.actor_cfg)
         # disaggregated mode: generation runs on its OWN mesh — the
         # engine (and its KV layout) binds to the rollout devices, and
         # params arrive there via the WeightPublisher instead of the
@@ -229,13 +238,13 @@ class PPOTrainer:
         if rollout_mesh is not None:
             rm = (rollout_mesh if int(np.prod(
                 list(rollout_mesh.shape.values()))) > 1 else None)
-            self.gen_engine = GenerationEngine(self.actor_cfg, mesh=rm,
+            self.gen_engine = GenerationEngine(gen_cfg, mesh=rm,
                                                **gen_opts)
         else:
-            self.gen_engine = (engine.generation_engine(**gen_opts)
+            self.gen_engine = (engine.generation_engine(cfg=gen_cfg,
+                                                        **gen_opts)
                                if engine is not None
-                               else GenerationEngine(self.actor_cfg,
-                                                     **gen_opts))
+                               else GenerationEngine(gen_cfg, **gen_opts))
         if self._multi:
             # jit the PPO step AGAINST the mesh: the state pins back to
             # the training layout every step (one compile across steps —

@@ -103,3 +103,92 @@ def decode_attention_fwd(q, k_cache, v_cache, valid, *, s_block=512,
         ],
         interpret=interpret,
     )(q, k_cache, v_cache, valid)
+
+
+# ===================================================================== #
+# Int8-KV variant: fused dequant inside the online-softmax accumulation.
+#
+# K/V tiles stay int8 all the way from HBM into the dot-products; the
+# per-(token, kv-head) absmax scales enter as rank-1 factors on the
+# *score* and *probability* tiles instead:
+#
+#   s[g, t]  = (q[g] . k_int8[t]) * k_scale[t] / sqrt(D)
+#   acc[g]  += sum_t (p[g, t] * v_scale[t]) * v_int8[t]
+#
+# which is algebraically identical to dequantizing K/V first but never
+# materializes an fp copy of the cache — the HBM read per token is
+# 2*D int8 + 2 fp32 scales instead of 2*D fp values, which is the whole
+# memory-bandwidth win of int8 KV on this bandwidth-bound kernel.
+# ===================================================================== #
+def _quant_kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, valid_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, ns):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)              # (sb, D) int8 widened
+    v = v_ref[0, 0].astype(jnp.float32)
+    ks = ks_ref[0, 0]                                # (sb,) fp32
+    vs = vs_ref[0, 0]
+    valid = valid_ref[0]                             # (sb,)
+    G, D = q.shape
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * ks[None, :] * (1.0 / np.sqrt(D))         # dequant K on scores
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    pv = p * vs[None, :]                             # dequant V on probs
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        pv, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == ns - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_quant_fwd(q, k_cache, v_cache, k_scale, v_scale, valid,
+                               *, s_block=512, interpret=False):
+    """q: (B, KV, G, D) fp; k/v: (B, KV, S, D) int8; k/v_scale:
+    (B, KV, S) fp32; valid: (B, S) bool."""
+    B, KV, G, D = q.shape
+    S = k_cache.shape[2]
+    s_block = min(s_block, S)
+    assert S % s_block == 0, (S, s_block)
+    ns = S // s_block
+    grid = (B, KV, ns)
+
+    kernel = functools.partial(_quant_kernel, ns=ns)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, s_block, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, s_block, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, s_block), lambda b, h, ik: (b, h, ik)),
+            pl.BlockSpec((1, 1, s_block), lambda b, h, ik: (b, h, ik)),
+            pl.BlockSpec((1, s_block), lambda b, h, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, k_scale.astype(jnp.float32),
+      v_scale.astype(jnp.float32), valid)

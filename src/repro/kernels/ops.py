@@ -56,6 +56,40 @@ def decode_attention(q, k_cache, v_cache, valid):
     return o.reshape(B, H, D)
 
 
+def decode_attention_quant(q, k_cache, v_cache, k_scale, v_scale, valid):
+    """Int8-KV decode.  q: (B, H, D) fp; caches: (B, S, KV, D) int8;
+    scales: (B, S, KV) fp32; valid: (B, S).  Dequant is fused into the
+    kernel's online softmax — K/V tiles cross HBM as int8 bytes."""
+    B, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    q4 = q.reshape(B, KV, G, D)
+    k4 = jnp.moveaxis(k_cache, 1, 2)
+    v4 = jnp.moveaxis(v_cache, 1, 2)
+    ks = jnp.moveaxis(k_scale, 1, 2)
+    vs = jnp.moveaxis(v_scale, 1, 2)
+    sb = _pick_block(S, 512)
+    o = _dec.decode_attention_quant_fwd(q4, k4, v4, ks, vs, valid,
+                                        s_block=sb, interpret=_interpret())
+    return o.reshape(B, H, D)
+
+
+def paged_decode_attention_quant(q, k_pool, v_pool, k_scale, v_scale,
+                                 block_tables, lens):
+    """Int8-KV paged decode.  q: (B, H, D) fp; pools: (nblocks, bs, KV, D)
+    int8 consumed without a transpose; scale pools: (nblocks, bs, KV)
+    fp32 riding the same block-table indirection; block_tables: (B, nb)
+    int32; lens: (B,) int32."""
+    B, H, D = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    q4 = q.reshape(B, KV, G, D)
+    o = _paged.paged_decode_attention_quant_fwd(
+        q4, k_pool, v_pool, k_scale, v_scale, block_tables, lens,
+        interpret=_interpret())
+    return o.reshape(B, H, D)
+
+
 def paged_decode_attention(q, k_pool, v_pool, block_tables, lens):
     """q: (B, H, D); pools: (nblocks, bs, KV, D) — the model-side paged
     cache layout, consumed without a transpose (the kernel's BlockSpec

@@ -84,6 +84,107 @@ def _kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+# ===================================================================== #
+# Int8-KV paged variant: the pool stores int8 K/V blocks plus per-row
+# fp32 scale planes (nblocks, bs, KV); dequant is fused into the
+# online-softmax accumulation exactly as in the dense int8 kernel
+# (k_scale multiplies the score tile, v_scale the probability tile), so
+# the DMA per cached token stays at 2*D int8 + 2 fp32 scales — fp K/V is
+# never materialized.  The block-table walk (scalar-prefetch index_map)
+# is identical to the fp kernel; scale tiles ride the same indirection.
+# ===================================================================== #
+def _quant_kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, bs, nb):
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n_valid = lens_ref[b]
+
+    @pl.when(ib * bs < n_valid)
+    def _accumulate():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)       # (bs, D) int8 widened
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        ks = ks_ref[0, :, 0]                         # (bs,) fp32
+        vs = vs_ref[0, :, 0]
+        G, D = q.shape
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * ks[None, :] * (1.0 / np.sqrt(D))     # dequant K on scores
+        rows = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        s = jnp.where(rows < n_valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+        pv = p * vs[None, :]                         # dequant V on probs
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            pv, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ib == nb - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_quant_fwd(q, k_pool, v_pool, k_scale, v_scale,
+                                     block_tables, lens, *, interpret=False):
+    """q: (B, KV, G, D) fp; k/v pool: (nblocks, bs, KV, D) int8;
+    k/v_scale: (nblocks, bs, KV) fp32; block_tables: (B, nb) int32;
+    lens: (B,) int32."""
+    B, KV, G, D = q.shape
+    nblocks, bs = k_pool.shape[0], k_pool.shape[1]
+    nb = block_tables.shape[1]
+    grid = (B, KV, nb)
+
+    def q_map(b, h, ib, tbl, lens):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, ib, tbl, lens):
+        return (tbl[b, ib], 0, h, 0)
+
+    def scale_map(b, h, ib, tbl, lens):
+        return (tbl[b, ib], 0, h)
+
+    kernel = functools.partial(_quant_kernel, bs=bs, nb=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), q_map),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+            pl.BlockSpec((1, bs, 1), scale_map),
+            pl.BlockSpec((1, bs, 1), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lens.astype(jnp.int32),
+      q, k_pool, v_pool, k_scale.astype(jnp.float32),
+      v_scale.astype(jnp.float32))
+
+
 def paged_decode_attention_fwd(q, k_pool, v_pool, block_tables, lens, *,
                                interpret=False):
     """q: (B, KV, G, D); k/v pool: (nblocks, bs, KV, D);

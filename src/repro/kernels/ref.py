@@ -54,6 +54,42 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lens):
                                 jnp.moveaxis(v_virt, 1, 2), valid)
 
 
+def decode_attention_quant_ref(q, k_cache, v_cache, k_scale, v_scale,
+                               valid):
+    """Int8-KV decode oracle.  q: (B, KV, G, D) fp; caches: (B, KV, S, D)
+    int8; scales: (B, KV, S) fp32; valid: (B, S) bool.  Mirrors the fused
+    kernel's algebra: scales are applied to the score/probability
+    matrices, never to a dequantized K/V copy."""
+    D = q.shape[-1]
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / np.sqrt(D)
+    s = s * k_scale.astype(jnp.float32)[:, :, None, :]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = p * v_scale.astype(jnp.float32)[:, :, None, :]
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def paged_decode_attention_quant_ref(q, k_pool, v_pool, k_scale, v_scale,
+                                     block_tables, lens):
+    """Int8-KV paged decode oracle.  q: (B, KV, G, D) fp; pools:
+    (nblocks, bs, KV, D) int8; scale pools: (nblocks, bs, KV) fp32;
+    block_tables: (B, nb) int32; lens: (B,) int32.  Gathers blocks and
+    scale rows into a dense virtual cache and reuses the dense oracle."""
+    B = q.shape[0]
+    nb, bs = block_tables.shape[1], k_pool.shape[1]
+    S = nb * bs
+    k_virt = k_pool[block_tables].reshape(B, S, *k_pool.shape[2:])
+    v_virt = v_pool[block_tables].reshape(B, S, *v_pool.shape[2:])
+    ks_virt = k_scale[block_tables].reshape(B, S, k_scale.shape[2])
+    vs_virt = v_scale[block_tables].reshape(B, S, v_scale.shape[2])
+    valid = jnp.arange(S)[None, :] < lens[:, None]
+    return decode_attention_quant_ref(
+        q, jnp.moveaxis(k_virt, 1, 2), jnp.moveaxis(v_virt, 1, 2),
+        jnp.moveaxis(ks_virt, 1, 2), jnp.moveaxis(vs_virt, 1, 2), valid)
+
+
 def rmsnorm_ref(x, w, eps=1e-5):
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)

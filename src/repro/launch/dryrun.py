@@ -61,7 +61,15 @@ def adapt_config(cfg: ModelConfig, shape_name: str,
         axes = (() if lead is None
                 else (lead,) if isinstance(lead, str) else tuple(lead))
         cfg = cfg.replace(batch_axes=axes, tp_axis="model")
-    if optimize == "kvquant" and not cfg.mla:
+    if optimize == "kvquant":
+        if cfg.mla:
+            # refuse rather than silently no-op: a cost row labelled
+            # "kvquant" must not report unquantized numbers (MLA caches
+            # compressed latents, not per-head K/V, so absmax head-dim
+            # scales don't apply)
+            raise ValueError(
+                f"--opt kvquant unsupported for MLA config {cfg.name!r}: "
+                "the MLA cache stores compressed latents, not K/V heads")
         cfg = cfg.replace(kv_quant=True)
     if optimize.startswith("wgather"):
         cfg = cfg.replace(weight_gather=True,

@@ -23,6 +23,11 @@ SAME drain loop — they differ only in when requests are fed to the core:
                              ``--num-blocks`` caps the pool (default:
                              dense-arena parity) and ``--watermark``
                              sets the free-block admission reserve
+- ``--kv-quant``             int8 KV: rows stored as int8 + per-(token,
+                             kv-head) fp32 scales on either layout; the
+                             paged pool grows scale planes that travel
+                             with their blocks, so ~3.5x more tokens fit
+                             the same KV-HBM budget (docs/serving.md)
 - ``--prefix-cache on``      paged only: radix prefix cache — shared
                              prompt prefixes are admitted as shared
                              read-only blocks and only the uncached
@@ -222,6 +227,12 @@ def main():
                     help="paged: free blocks reserved at admission "
                          "(default: dynamic, one chunk of appends per "
                          "running slot)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache: K/V rows are stored as int8 "
+                         "with per-(token, kv-head) fp32 absmax scales "
+                         "(dense arena and paged pool both supported); "
+                         "~3.5x more tokens per KV byte at a bounded "
+                         "logit-error budget — see docs/serving.md")
     ap.add_argument("--prefix-cache", choices=["on", "off"], default="off",
                     help="paged: prefix-aware block reuse — admission "
                          "maps the longest cached prompt prefix into "
@@ -252,6 +263,8 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    if args.kv_quant:
+        cfg = cfg.replace(kv_quant=True)
     key = jax.random.PRNGKey(args.seed)
     params = T.init_params(cfg, key)
     if args.ckpt:

@@ -98,7 +98,8 @@ def run_rlhf(args, cfg):
                     rm_steps=args.steps, rm_batch=args.batch,
                     ppo_steps=args.steps, ppo_batch=args.batch,
                     seed=args.seed),
-        PPOConfig(max_new_tokens=args.max_new, temperature=1.0),
+        PPOConfig(max_new_tokens=args.max_new, temperature=1.0,
+                  kv_quant=args.kv_quant),
         checkpointer=mgr, save_every=args.save_every or 1,
         async_cfg=async_cfg)
     out = pipe.run()
@@ -171,6 +172,11 @@ def main():
                          "max ratio exceeds it drops the run to lockstep")
     ap.add_argument("--max-new", type=int, default=16,
                     help="PPO generation budget per prompt (--rlhf)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache for PPO experience generation "
+                         "(--rlhf): the generation engine stores K/V as "
+                         "int8 + per-row fp32 scales, training forwards "
+                         "are untouched")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -431,11 +431,18 @@ def paged_attn_cache_shape(cfg: ModelConfig, num_blocks: int,
     """Paged layout: a shared pool of ``num_blocks`` fixed-size KV blocks
     (block 0 reserved as the trash block) instead of a per-slot
     ``(batch, S)`` arena.  Row layout inside a block matches the dense
-    arena's ``(S, KV, D)`` convention with ``S -> block_size``.  Only
-    plain GQA attention is paged (no MLA / int8-KV / sliding-window)."""
-    assert not (cfg.mla or cfg.kv_quant), "paged KV: plain GQA only"
-    return dict(k=(num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim),
-                v=(num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim))
+    arena's ``(S, KV, D)`` convention with ``S -> block_size``.  With
+    ``cfg.kv_quant`` the pool stores int8 K/V plus per-row fp32 scale
+    planes ``(num_blocks, bs, KV)`` that travel with their blocks
+    through every scatter/gather (admission, preemption, prefix cache).
+    Full-context GQA only (no MLA / sliding-window)."""
+    assert not cfg.mla, "paged KV: GQA only (MLA caches latents)"
+    out = dict(k=(num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim),
+               v=(num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim))
+    if cfg.kv_quant:
+        out["k_scale"] = (num_blocks, block_size, cfg.n_kv_heads)
+        out["v_scale"] = (num_blocks, block_size, cfg.n_kv_heads)
+    return out
 
 
 def decode_attention_paged(q, k_pool, v_pool, block_tables, lens,
@@ -465,20 +472,33 @@ def decode_attention_paged(q, k_pool, v_pool, block_tables, lens,
 
 def _kv_quant(x):
     """absmax int8 quantization over the head dim.
-    x: (..., hd) -> (int8 (..., hd), f32 scale (...,))."""
-    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    x: (..., hd) -> (int8 (..., hd), f32 scale (...,)).
+
+    The scale is *floored* at 1e-8 (div-by-zero guard for all-zero rows),
+    not epsilon-inflated: ``max|x|/127 + eps`` would shrink every row
+    below full int8 range and near-zero rows (max|x| ~ 1e-6) would lose
+    more than a bit of their mantissa to the additive term."""
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0, 1e-8)
     xi = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
                   -127, 127).astype(jnp.int8)
     return xi, scale.astype(jnp.float32)
 
 
-def decode_attention_quant(q, k_i8, v_i8, k_scale, v_scale, valid_mask):
+def decode_attention_quant(q, k_i8, v_i8, k_scale, v_scale, valid_mask,
+                           use_pallas=False):
     """Flash-decode over an int8 KV cache: the dots consume int8 operands
     (XLA fuses the widening convert, so HBM traffic is the int8 bytes);
     per-slot scales are applied to the score/probability matrices, never
-    to the cache-sized tensors.
+    to the cache-sized tensors.  The Pallas path fuses the same algebra
+    into the online-softmax decode kernel (see
+    :func:`repro.kernels.decode_attention.decode_attention_quant_fwd`).
 
     q: (B, H, D); k_i8/v_i8: (B, S, KV, D) int8; scales: (B, S, KV)."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.decode_attention_quant(q, k_i8, v_i8, k_scale, v_scale,
+                                           valid_mask)
     B, H, D = q.shape
     KV = k_i8.shape[2]
     G = H // KV
@@ -493,6 +513,33 @@ def decode_attention_quant(q, k_i8, v_i8, k_scale, v_scale, valid_mask):
     pv = p * jnp.moveaxis(v_scale, 1, 2)[:, :, None, :]
     o = jnp.einsum("bkgs,bskd->bkgd", pv, v_i8.astype(jnp.float32))
     return o.reshape(B, H, D).astype(q.dtype)
+
+
+def decode_attention_paged_quant(q, k_pool, v_pool, k_scale, v_scale,
+                                 block_tables, lens, use_pallas=False):
+    """Single-token attention over an int8 block-pooled KV cache.
+
+    q: (B, H, D); k/v pool: (nblocks, bs, KV, D) int8; scale pools:
+    (nblocks, bs, KV) fp32; block_tables: (B, nb) int32; lens: (B,).
+    The jnp path gathers blocks *and their scale rows* into a dense
+    virtual cache and reuses :func:`decode_attention_quant` — bit-
+    identical to the dense int8 arena when ``nb*bs`` equals the arena
+    length; the Pallas path walks the block table with dequant fused
+    into the online softmax (no gather, no fp materialization)."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.paged_decode_attention_quant(
+            q, k_pool, v_pool, k_scale, v_scale, block_tables, lens)
+    B = q.shape[0]
+    nb, bs = block_tables.shape[1], k_pool.shape[1]
+    k_pool = opt_barrier(k_pool)
+    v_pool = opt_barrier(v_pool)
+    k_virt = k_pool[block_tables].reshape(B, nb * bs, *k_pool.shape[2:])
+    v_virt = v_pool[block_tables].reshape(B, nb * bs, *v_pool.shape[2:])
+    ks_virt = k_scale[block_tables].reshape(B, nb * bs, k_scale.shape[2])
+    vs_virt = v_scale[block_tables].reshape(B, nb * bs, v_scale.shape[2])
+    valid = jnp.arange(nb * bs)[None, :] < lens[:, None]
+    return decode_attention_quant(q, k_virt, v_virt, ks_virt, vs_virt, valid)
 
 
 def attn_apply(cfg: ModelConfig, p, x, *, positions, mode, cache=None,
@@ -528,20 +575,34 @@ def attn_apply(cfg: ModelConfig, p, x, *, positions, mode, cache=None,
         # prefix cache never indexes that last block, so its possibly
         # stale rows are never reused as a cached prefix.
         assert cache is not None
-        assert not cfg.kv_quant and window is None, \
-            "paged KV supports plain full-context GQA only"
+        assert window is None, \
+            "paged KV supports full-context GQA only"
         bs = cache["k"].shape[1]
         nb = block_tables.shape[1]
         pos = positions[:, 0]                       # (B,)
         bi = jnp.minimum(pos // bs, nb - 1)
         blk = jnp.take_along_axis(block_tables, bi[:, None], axis=1)[:, 0]
         off = pos % bs
-        k_pool = opt_barrier(cache["k"]).at[blk, off].set(k[:, 0])
-        v_pool = opt_barrier(cache["v"]).at[blk, off].set(v[:, 0])
         lens = jnp.minimum(pos + 1, nb * bs)
-        o = decode_attention_paged(q[:, 0], k_pool, v_pool, block_tables,
-                                   lens, use_pallas=cfg.use_pallas)
-        new_cache = dict(k=k_pool, v=v_pool)
+        if cfg.kv_quant:
+            ki, ks = _kv_quant(k[:, 0])             # (B,KV,hd),(B,KV)
+            vi, vs = _kv_quant(v[:, 0])
+            k_pool = opt_barrier(cache["k"]).at[blk, off].set(ki)
+            v_pool = opt_barrier(cache["v"]).at[blk, off].set(vi)
+            ks_pool = cache["k_scale"].at[blk, off].set(ks)
+            vs_pool = cache["v_scale"].at[blk, off].set(vs)
+            o = decode_attention_paged_quant(
+                q[:, 0], k_pool, v_pool, ks_pool, vs_pool, block_tables,
+                lens, use_pallas=cfg.use_pallas)
+            new_cache = dict(k=k_pool, v=v_pool, k_scale=ks_pool,
+                             v_scale=vs_pool)
+        else:
+            k_pool = opt_barrier(cache["k"]).at[blk, off].set(k[:, 0])
+            v_pool = opt_barrier(cache["v"]).at[blk, off].set(v[:, 0])
+            o = decode_attention_paged(q[:, 0], k_pool, v_pool,
+                                       block_tables, lens,
+                                       use_pallas=cfg.use_pallas)
+            new_cache = dict(k=k_pool, v=v_pool)
         o = o[:, None]                              # (B,1,H,hd)
     elif mode == "decode":
         assert cache is not None
@@ -562,7 +623,8 @@ def attn_apply(cfg: ModelConfig, p, x, *, positions, mode, cache=None,
             n_valid = jnp.minimum(pos + 1, S)
             valid = jnp.arange(S)[None, :] < n_valid[:, None]
             o = decode_attention_quant(q[:, 0], k_cache, v_cache,
-                                       ks_cache, vs_cache, valid)
+                                       ks_cache, vs_cache, valid,
+                                       use_pallas=cfg.use_pallas)
             new_cache = dict(k=k_cache, v=v_cache, k_scale=ks_cache,
                              v_scale=vs_cache)
         else:
@@ -587,8 +649,17 @@ def attn_apply(cfg: ModelConfig, p, x, *, positions, mode, cache=None,
         # positions when first written, current q/k via ``positions``).
         k_att, v_att = k, v
         if cache is not None and "hk" in cache:
-            k_att = jnp.concatenate([cache["hk"], k], axis=1)
-            v_att = jnp.concatenate([cache["hv"], v], axis=1)
+            hk, hv = cache["hk"], cache["hv"]
+            if cfg.kv_quant:
+                # int8 history: dequantize the gathered prefix before the
+                # concat — a (B, P, KV, hd) compute-side temporary, not a
+                # cache write; the pool itself stays int8
+                hk = (hk.astype(jnp.float32)
+                      * cache["hk_scale"][..., None]).astype(k.dtype)
+                hv = (hv.astype(jnp.float32)
+                      * cache["hv_scale"][..., None]).astype(v.dtype)
+            k_att = jnp.concatenate([hk, k], axis=1)
+            v_att = jnp.concatenate([hv, v], axis=1)
         if cfg.use_pallas:
             from repro.kernels import ops as kops
             o = kops.flash_attention(q, k_att, v_att, causal=True,

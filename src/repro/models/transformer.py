@@ -120,8 +120,10 @@ def paged_cache_struct(cfg: ModelConfig, num_blocks: int, block_size: int):
     see :mod:`repro.serving.block_pool`).  The per-slot *block tables*
     are not part of this tree — they are layer-invariant and threaded
     through :func:`forward` as a side input.  Attention-only configs
-    (no MLA / SSM / cross / int8-KV / sliding-window) — the serving
-    engine validates this before choosing the paged layout."""
+    (no MLA / SSM / cross / sliding-window) — the serving engine
+    validates this before choosing the paged layout.  With
+    ``cfg.kv_quant`` the pool leaves are int8 plus fp32 ``k_scale`` /
+    ``v_scale`` planes ``(num_blocks, bs, KV)``."""
     segs = []
     for seg in cfg.segments():
         unit = []

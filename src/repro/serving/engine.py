@@ -287,11 +287,13 @@ class GenerationEngine:
             ls.kind != ATTN for seg in cfg.segments() for ls in seg.unit_spec)
         if kv_layout == "paged":
             # paged_cache_struct raises for SSM/hybrid/cross/sliding-window;
-            # MLA and int8-KV have their own cache geometries (dense-only)
-            if cfg.mla or cfg.kv_quant or cfg.arch_type == "vlm":
+            # MLA caches compressed latents (dense-only geometry).  int8-KV
+            # IS paged: the pool grows per-row scale planes that travel
+            # with their blocks (see models.modules.paged_attn_cache_shape)
+            if cfg.mla or cfg.arch_type == "vlm":
                 raise NotImplementedError(
                     "paged KV cache supports plain-GQA token-input "
-                    "decoder LMs (no MLA / int8-KV / VLM)")
+                    "decoder LMs (no MLA / VLM)")
             T.paged_cache_struct(cfg, 2, self.block_size)
         self.last_stats: dict = {}
 
@@ -502,7 +504,11 @@ class GenerationEngine:
 
         def merge(row_t, hist_t):
             if isinstance(row_t, dict):
-                return {**row_t, "hk": hist_t["k"], "hv": hist_t["v"]}
+                out = {**row_t, "hk": hist_t["k"], "hv": hist_t["v"]}
+                if "k_scale" in hist_t:       # int8 pool: scales travel too
+                    out["hk_scale"] = hist_t["k_scale"]
+                    out["hv_scale"] = hist_t["v_scale"]
+                return out
             return tuple(merge(r, h) for r, h in zip(row_t, hist_t))
 
         hist = jax.tree_util.tree_map(gather, pool)

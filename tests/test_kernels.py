@@ -60,6 +60,100 @@ def test_decode_attention_kernel(B, KV, G, S, D, sb, dtype):
                                rtol=tol, atol=tol)
 
 
+# ------------------------------------------------------------------ #
+# int8-KV fused-dequant kernels vs ref.py — GQA shapes, ragged lens,
+# trash-block rows
+# ------------------------------------------------------------------ #
+def _quant_cache(key, shape):
+    """Random int8 values + per-row scales shaped like a real quantized
+    cache (scales ~ absmax/127 of unit-normal activations)."""
+    k1, k2 = jax.random.split(key)
+    xi = jax.random.randint(k1, shape, -127, 128, jnp.int32).astype(jnp.int8)
+    scale = jax.random.uniform(k2, shape[:-1], jnp.float32, 0.5, 3.0) / 127.0
+    return xi, scale
+
+
+@pytest.mark.parametrize("B,KV,G,S,D,sb", [
+    (2, 2, 2, 128, 32, 64),
+    (1, 4, 1, 64, 64, 32),
+    (3, 1, 8, 96, 16, 32),
+    (1, 8, 4, 256, 128, 128),
+])
+def test_decode_attention_quant_kernel(B, KV, G, S, D, sb):
+    from repro.kernels.decode_attention import decode_attention_quant_fwd
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    q = jax.random.normal(k1, (B, KV, G, D), jnp.float32)
+    kc, ks = _quant_cache(k2, (B, KV, S, D))
+    vc, vs = _quant_cache(k3, (B, KV, S, D))
+    nv = jax.random.randint(k4, (B,), 1, S)         # ragged lens
+    valid = jnp.arange(S)[None] < nv[:, None]
+    o = decode_attention_quant_fwd(q, kc, vc, ks, vs, valid, s_block=sb,
+                                   interpret=True)
+    r = ref.decode_attention_quant_ref(q, kc, vc, ks, vs, valid)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,KV,G,D,bs,nb,nblocks", [
+    (2, 2, 2, 32, 8, 4, 12),
+    (1, 1, 8, 64, 16, 2, 5),
+    (3, 4, 1, 16, 8, 8, 40),
+])
+def test_paged_attention_quant_kernel(B, KV, G, D, bs, nb, nblocks):
+    """Ragged lens mean trailing table entries point at the trash block
+    (id 0, zero values AND zero scales) — those rows must contribute
+    nothing, exactly like the fp paged kernel's masking."""
+    from repro.kernels.paged_attention import paged_decode_attention_quant_fwd
+    k1, k2, k3, k4, k5 = jax.random.split(KEY, 5)
+    q = jax.random.normal(k1, (B, KV, G, D), jnp.float32)
+    kp, ks = _quant_cache(k2, (nblocks, bs, KV, D))
+    vp, vs = _quant_cache(k3, (nblocks, bs, KV, D))
+    # trash block 0 as the allocator initializes it: all-zero
+    kp = kp.at[0].set(0); ks = ks.at[0].set(0.0)
+    vp = vp.at[0].set(0); vs = vs.at[0].set(0.0)
+    lens = jax.random.randint(k5, (B,), 1, nb * bs + 1)
+    tbl = jax.random.randint(k4, (B, nb), 1, nblocks)
+    # entries past each sequence's allocated prefix -> trash block
+    nb_used = -(-lens[:, None] // bs)               # ceil-div, (B,1)
+    tbl = jnp.where(jnp.arange(nb)[None] < nb_used, tbl, 0)
+    o = paged_decode_attention_quant_fwd(q, kp, vp, ks, vs, tbl, lens,
+                                         interpret=True)
+    r = ref.paged_decode_attention_quant_ref(q, kp, vp, ks, vs, tbl, lens)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ops_quant_adapters_match_jnp_paths():
+    """ops.decode_attention_quant / paged_decode_attention_quant accept
+    model-layout tensors and match the jnp model paths in
+    repro.models.modules (the use_pallas dispatch contract)."""
+    from repro.models.modules import (decode_attention_paged_quant,
+                                      decode_attention_quant)
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    B, H, KV, D, S = 2, 4, 2, 16, 32
+    qd = jax.random.normal(k1, (B, H, D))
+    kc, ks = _quant_cache(k2, (B, KV, S, D))
+    vc, vs = _quant_cache(k3, (B, KV, S, D))
+    # model layout: (B, S, KV, D) caches, (B, S, KV) scales
+    km, vm = jnp.moveaxis(kc, 2, 1), jnp.moveaxis(vc, 2, 1)
+    ksm, vsm = jnp.moveaxis(ks, 2, 1), jnp.moveaxis(vs, 2, 1)
+    valid = jnp.arange(S)[None] < jnp.asarray([S, 19])[:, None]
+    o = ops.decode_attention_quant(qd, km, vm, ksm, vsm, valid)
+    r = decode_attention_quant(qd, km, vm, ksm, vsm, valid)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=1e-4, atol=1e-4)
+
+    bs, nb, nblocks = 8, 4, 7
+    kp, ksp = _quant_cache(k2, (nblocks, bs, KV, D))
+    vp, vsp = _quant_cache(k3, (nblocks, bs, KV, D))
+    tbl = jax.random.randint(k1, (B, nb), 0, nblocks)
+    lens = jnp.asarray([nb * bs, 13])
+    op = ops.paged_decode_attention_quant(qd, kp, vp, ksp, vsp, tbl, lens)
+    rp = decode_attention_paged_quant(qd, kp, vp, ksp, vsp, tbl, lens)
+    np.testing.assert_allclose(np.asarray(op), np.asarray(rp),
+                               rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("R,D,rb", [(512, 64, 128), (96, 256, 32),
                                     (64, 1024, 64)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -178,6 +178,43 @@ def test_hybrid_reshard_generation_token_identical(dp, tp):
 
 
 @pytest.mark.parametrize("dp,tp", MESHES, ids=MESH_IDS)
+def test_paged_int8_under_mesh_token_identical(dp, tp):
+    """Paged int8-KV under the Hybrid-Engine mesh (PR 5 layout rules:
+    TP params, REPLICATED int8 pool + scale planes, host-side block
+    tables) streams exactly the single-device paged int8 engine's
+    greedy tokens — admission, decode, and preemption all run over the
+    quantized pool."""
+    mesh = make_mesh(dp, tp)
+    he = HybridEngine(ACTOR, mesh)
+    qcfg = ACTOR.replace(kv_quant=True)
+    params = T.init_params(ACTOR, jax.random.PRNGKey(1))
+    p_infer = he.to_inference(jax.device_put(params, he.train_shardings))
+
+    gen_kw = dict(max_new_tokens=8, temperature=0.0, eos_id=3,
+                  kv_layout="paged", block_size=4)
+    e0 = GenerationEngine(qcfg, **gen_kw)
+    e1 = he.generation_engine(cfg=qcfg, **gen_kw)
+    assert e1.cfg.kv_quant
+    reqs = [Request(uid=i, tokens=PROMPTS[i], max_new_tokens=8)
+            for i in range(len(PROMPTS))]
+    c0 = {c.uid: c for c in e0.serve(params, reqs, KEY, slots=2)}
+    c1 = {c.uid: c for c in e1.serve(p_infer, reqs, KEY, slots=2)}
+    for uid in c0:
+        np.testing.assert_array_equal(c0[uid].tokens, c1[uid].tokens)
+        assert c0[uid].finish_reason == c1[uid].finish_reason
+
+    # a tight pool under the mesh: preemption over the replicated int8
+    # pool must still match the single-device streams
+    t0 = GenerationEngine(qcfg, **{**gen_kw, "chunk": 2})
+    t1 = he.generation_engine(cfg=qcfg, **{**gen_kw, "chunk": 2})
+    kw = dict(slots=2, max_seq_len=16, num_blocks=7, watermark=0)
+    d0 = {c.uid: c for c in t0.serve(params, reqs, KEY, **kw)}
+    d1 = {c.uid: c for c in t1.serve(p_infer, reqs, KEY, **kw)}
+    for uid in d0:
+        np.testing.assert_array_equal(d0[uid].tokens, d1[uid].tokens)
+
+
+@pytest.mark.parametrize("dp,tp", MESHES, ids=MESH_IDS)
 def test_reshard_roundtrip_and_measured_stats(dp, tp):
     """Layout roundtrip is exact; the measured stats describe a real
     collective: to_inference gathers exactly the bytes to_train frees."""

@@ -233,8 +233,17 @@ def test_paged_rejects_unsupported_configs():
                           ssm_state=16, compute_dtype="float32", remat=False)
     with pytest.raises(NotImplementedError):
         GenerationEngine(ssm_cfg, max_new_tokens=4, kv_layout="paged")
+    # int8-KV is paged-capable now; MLA (latent cache geometry) and VLM
+    # remain dense-only
+    mla_cfg = ModelConfig(name="m", arch_type="dense", mla=True,
+                          kv_lora_rank=32, qk_nope_head_dim=16,
+                          qk_rope_head_dim=8, v_head_dim=16, n_layers=2,
+                          d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                          vocab_size=V, compute_dtype="float32", remat=False)
     with pytest.raises(NotImplementedError):
-        GenerationEngine(CFG.replace(kv_quant=True), max_new_tokens=4,
+        GenerationEngine(mla_cfg, max_new_tokens=4, kv_layout="paged")
+    with pytest.raises(NotImplementedError):
+        GenerationEngine(mla_cfg.replace(kv_quant=True), max_new_tokens=4,
                          kv_layout="paged")
     with pytest.raises(NotImplementedError):
         GenerationEngine(CFG.replace(sliding_window=8), max_new_tokens=4,
@@ -245,3 +254,110 @@ def test_paged_rejects_unsupported_configs():
     with pytest.raises(ValueError):
         _engine("dense").serve(PARAMS, _ragged_requests([4], [2]),
                                jax.random.PRNGKey(0), slots=1, num_blocks=8)
+
+
+# ------------------------------------------------------------------ #
+# int8 KV over the paged path: the pool stores int8 K/V + per-row fp32
+# scale planes that travel with their blocks (see docs/serving.md)
+# ------------------------------------------------------------------ #
+QCFG = CFG.replace(kv_quant=True)
+
+
+def _qengine(cfg, **kw):
+    kw.setdefault("max_new_tokens", 8)
+    kw.setdefault("temperature", 0.0)
+    kw.setdefault("chunk", 4)
+    return GenerationEngine(cfg, kv_layout="paged", block_size=4, **kw)
+
+
+def test_paged_int8_pool_has_scale_planes():
+    pool = T.init_paged_cache(QCFG, 6, 4)
+    leaf = pool[0][0]
+    assert leaf["k"].dtype == jnp.int8 and leaf["v"].dtype == jnp.int8
+    assert leaf["k_scale"].shape == (QCFG.n_layers, 6, 4, QCFG.n_kv_heads)
+    assert leaf["k_scale"].dtype == jnp.float32
+
+
+def test_paged_int8_matches_dense_int8_bitwise():
+    """The identity suite: two KV layouts over the SAME quantization must
+    stream bit-identical greedy tokens (same quantized rows, same score
+    algebra, virtual-dense gather == arena)."""
+    reqs = _ragged_requests([3, 7, 5, 4, 6, 3], [5, 8, 4, 6, 3, 7])
+    kw = dict(slots=3, max_seq_len=16)
+    d = {c.uid: c for c in GenerationEngine(
+        QCFG, kv_layout="dense", max_new_tokens=8, temperature=0.0,
+        chunk=4).serve(PARAMS, reqs, jax.random.PRNGKey(9), **kw)}
+    p = {c.uid: c for c in _qengine(QCFG).serve(
+        PARAMS, reqs, jax.random.PRNGKey(9), **kw)}
+    assert sorted(p) == sorted(d) == list(range(6))
+    for uid in d:
+        np.testing.assert_array_equal(d[uid].tokens, p[uid].tokens)
+
+
+def test_paged_int8_greedy_argmax_parity_vs_fp():
+    """int8 on/off over the paged path: quantization shifts logits
+    within the asserted error budget (see test_models'
+    test_kv_quant_decode_parity), so greedy argmax — what generation
+    consumes — must match the fp path on this margin-healthy suite."""
+    reqs = _ragged_requests([3, 7, 5, 4, 6, 3], [5, 8, 4, 6, 3, 7], seed=2)
+    kw = dict(slots=3, max_seq_len=16)
+    f = {c.uid: c for c in _qengine(CFG).serve(
+        PARAMS, reqs, jax.random.PRNGKey(9), **kw)}
+    q = {c.uid: c for c in _qengine(QCFG).serve(
+        PARAMS, reqs, jax.random.PRNGKey(9), **kw)}
+    assert sorted(q) == sorted(f) == list(range(6))
+    for uid in f:
+        np.testing.assert_array_equal(f[uid].tokens, q[uid].tokens)
+
+
+def test_paged_int8_preemption_streams_match_reference():
+    """Tight pool forces preemptions; every re-admitted int8 stream must
+    still match the per-request int8 fixed-batch reference (quantized
+    rows survive the evict/re-prefill cycle)."""
+    reqs = _ragged_requests([3, 9, 4, 7, 5, 6], [8, 5, 7, 3, 6, 4])
+    eng = _qengine(QCFG, chunk=2)
+    outs = eng.serve(PARAMS, reqs, jax.random.PRNGKey(5), slots=3,
+                     max_seq_len=20, num_blocks=6, watermark=0)
+    assert sorted(c.uid for c in outs) == list(range(6))
+    assert eng.last_stats["preemptions"] > 0
+    for c in outs:
+        r = reqs[c.uid]
+        ref_out = generate(QCFG, PARAMS, jnp.asarray(r.tokens)[None], KEY,
+                           max_new_tokens=r.max_new_tokens, temperature=0.0)
+        np.testing.assert_array_equal(
+            c.tokens,
+            np.asarray(ref_out["sequences"][0, len(r.tokens):]))
+
+
+def test_paged_int8_prefix_cache_on_off_within_budget():
+    """Prefix-cache admission over an int8 pool: the suffix attends the
+    DEQUANTIZED gathered history while a cold prefill attends the
+    original fp keys, so streams agree within the quantization budget —
+    asserted as greedy argmax parity on this margin-healthy suite —
+    and the scale planes must ride the shared blocks (hit rate > 0)."""
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, V, size=8).astype(np.int32)
+    reqs = [Request(uid=i,
+                    tokens=np.concatenate(
+                        [shared, rng.integers(0, V, size=4)]).astype(
+                            np.int32),
+                    max_new_tokens=6)
+            for i in range(5)]
+    e_on = _qengine(QCFG, prefix_cache=True)
+    on = {c.uid: c for c in e_on.serve(PARAMS, reqs, jax.random.PRNGKey(2),
+                                       slots=2, max_seq_len=24)}
+    off = {c.uid: c for c in _qengine(QCFG).serve(
+        PARAMS, reqs, jax.random.PRNGKey(2), slots=2, max_seq_len=24)}
+    assert e_on.last_stats["prefill_hit_rate"] > 0.3
+    for uid in off:
+        np.testing.assert_array_equal(on[uid].tokens, off[uid].tokens)
+
+
+def test_paged_int8_single_compiled_chunk_graph():
+    """Retrace guard: mixed ragged int8 traffic still compiles exactly
+    ONE paged chunk graph (admission buckets retrace by design; the
+    steady-state decode graph must not)."""
+    reqs = _ragged_requests([3, 7, 5, 4, 6, 3], [5, 8, 4, 6, 3, 7])
+    eng = _qengine(QCFG)
+    eng.serve(PARAMS, reqs, jax.random.PRNGKey(9), slots=3, max_seq_len=16)
+    assert eng._paged_chunk_fn._cache_size() == 1
